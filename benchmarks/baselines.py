@@ -1,0 +1,220 @@
+"""Baseline system simulators for the paper's throughput comparisons.
+
+Each simulator maps a (cluster, model, batch) triple to predicted
+throughput (samples/s) or an OOM verdict, using the *same* analytic cost
+models as the Cephalo planner — so the comparison isolates the
+*scheduling/sharding policy*, exactly what the paper's tables compare.
+
+Fidelity notes (documented simplifications):
+
+* Megatron-Het — pipeline across nodes, data parallel (ZeRO-2) within;
+  stage layer counts ∝ node compute; identical per-pipeline partition
+  (the paper's key criticism); TP fallback when OOM with slow-interconnect
+  all-reduce costs.
+* FlashFlex — memory-proportional stage partition (the paper: "partitions
+  layers into pipeline stages according to memory, rather than compute"),
+  ZeRO-2, per-stage microbatching.
+* Whale / HAP / vanilla FSDP — thin wrappers over the planner's
+  ``plan_whale`` / ``_fixed_assignment`` ablations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import (BYTES_PER_PARAM_STATE, ClusterCostModel,
+                                   CommModel, MEMORY_CAP_FRACTION)
+from repro.core.device_specs import Cluster, DeviceSpec
+
+#: intra-node interconnect for TP when there is no NVSwitch (paper Sec 4.2)
+PCIE_GBPS = 128.0
+
+
+@dataclasses.dataclass
+class SimResult:
+    system: str
+    throughput: float = 0.0     # samples / s
+    oom: bool = False
+    note: str = ""
+
+    @property
+    def display(self) -> str:
+        return "OOM" if self.oom else f"{self.throughput:.2f}"
+
+
+def _nodes(cluster: Cluster, node_size: int = 4) -> List[List[int]]:
+    """Group ranks into machines (Cluster A: 2x4; Cluster B: 8x8)."""
+    if cluster.n % 8 == 0 and cluster.n >= 16:
+        node_size = 8
+    return [list(range(i, min(i + node_size, cluster.n)))
+            for i in range(0, cluster.n, node_size)]
+
+
+def _stage_time(cm: ClusterCostModel, ranks: Sequence[int], layers: float,
+                m: int, dp: int, tp: int = 1) -> float:
+    """Per-microbatch time of one pipeline stage: slowest member GPU
+    processing its DP share of the microbatch over `layers` layers."""
+    per_layer = 0.0
+    for r in ranks:
+        t = cm.per_rank[r].t_fwd.one(max(m, 1)) + \
+            cm.per_rank[r].t_bwd.one(max(m, 1))
+        per_layer = max(per_layer, t / max(tp, 1))
+    if tp > 1:
+        # 4 all-reduces (2 fwd + 2 bwd) of activations per layer over PCIe
+        act = m * cm.model.seq_len * _d_model(cm) * 4
+        per_layer += 4 * act * 2 * (tp - 1) / tp / (PCIE_GBPS * 1e9 / 8)
+    return per_layer * layers
+
+
+def _d_model(cm: ClusterCostModel) -> int:
+    # infer d_model-ish width from activation bytes
+    s, _ = cm.model.layers[0]
+    return max(s.act_bytes // (cm.model.seq_len * 4), 1)
+
+
+def _params_per_layer(cm: ClusterCostModel) -> float:
+    return sum(s.params * c for s, c in cm.model.layers) / \
+        max(cm.model.n_layers, 1)
+
+
+def simulate_megatron_het(cm: ClusterCostModel, batch: int) -> SimResult:
+    cluster = cm.cluster
+    nodes = _nodes(cluster)
+    n_stages = len(nodes)
+    total_layers = cm.model.n_layers
+    # layers ∝ node compute
+    node_flops = [sum(cluster.devices[r].peak_flops for r in nd)
+                  for nd in nodes]
+    shares = np.asarray(node_flops) / sum(node_flops)
+    layers = np.maximum(np.round(shares * total_layers), 1)
+
+    p_layer = _params_per_layer(cm)
+    best: Optional[SimResult] = None
+    for tp in (1, 2, 4):
+        for m in (1, 2, 4, 8, 16, 32):
+            dp_groups = [len(nd) // tp for nd in nodes]
+            if min(dp_groups) < 1:
+                continue
+            n_micro = batch // (m * min(dp_groups))
+            if n_micro < 1:
+                continue
+            ok = True
+            stage_t = 0.0
+            for si, nd in enumerate(nodes):
+                # ZeRO-2 within node: params fp32 replicated (4B) +
+                # grads/optimizer sharded (12B / node dp)
+                state = layers[si] * p_layer * (
+                    4 / tp + 12 / (tp * dp_groups[si]))
+                comp = cm.per_rank[nd[0]].memory(m) / tp + \
+                    layers[si] / total_layers * 0  # act per stage below
+                act = m * cm.model.seq_len * _d_model(cm) * 4 * \
+                    layers[si] * n_stages / tp   # in-flight microbatches
+                for r in nd:
+                    cap = cm.per_rank[r].mem_cap()
+                    if state + comp + act > cap:
+                        ok = False
+                stage_t = max(stage_t, _stage_time(
+                    cm, nd, float(layers[si]), m, dp_groups[si], tp))
+            if not ok:
+                continue
+            iter_t = (n_micro + n_stages - 1) * stage_t
+            thpt = batch / iter_t
+            if best is None or thpt > best.throughput:
+                best = SimResult("megatron-het", thpt,
+                                 note=f"tp={tp} m={m}")
+    return best or SimResult("megatron-het", oom=True)
+
+
+def simulate_flashflex(cm: ClusterCostModel, batch: int) -> SimResult:
+    cluster = cm.cluster
+    nodes = _nodes(cluster)
+    n_stages = len(nodes)
+    total_layers = cm.model.n_layers
+    # memory-proportional stage partition (paper Sec. 4.3)
+    node_mem = [sum(cluster.devices[r].memory_bytes for r in nd)
+                for nd in nodes]
+    shares = np.asarray(node_mem) / sum(node_mem)
+    layers = np.maximum(np.round(shares * total_layers), 1)
+    p_layer = _params_per_layer(cm)
+
+    best: Optional[SimResult] = None
+    for tp in (1, 2):
+        for m in (1, 2, 4, 8):
+            dp_groups = [len(nd) // tp for nd in nodes]
+            if min(dp_groups) < 1:
+                continue
+            n_micro = batch // (m * min(dp_groups))
+            if n_micro < 1:
+                continue
+            ok = True
+            stage_t = 0.0
+            for si, nd in enumerate(nodes):
+                state = layers[si] * p_layer * (
+                    4 / tp + 12 / (tp * dp_groups[si]))
+                act = m * cm.model.seq_len * _d_model(cm) * 4 * \
+                    layers[si] / tp    # 1F1B: one microbatch live
+                for r in nd:
+                    if state + act + cm.per_rank[r].memory(m) / tp > \
+                            cm.per_rank[r].mem_cap():
+                        ok = False
+                stage_t = max(stage_t, _stage_time(
+                    cm, nd, float(layers[si]), m, dp_groups[si], tp))
+            if not ok:
+                continue
+            iter_t = (n_micro + n_stages - 1) * stage_t
+            thpt = batch / iter_t
+            if best is None or thpt > best.throughput:
+                best = SimResult("flashflex", thpt, note=f"tp={tp} m={m}")
+    return best or SimResult("flashflex", oom=True)
+
+
+def simulate_hap(cm: ClusterCostModel, batch: int) -> SimResult:
+    """HAP: TP across nodes (degree = #nodes), uneven DP batch within;
+    ignores memory constraints (paper App. D) — so we check them."""
+    cluster = cm.cluster
+    nodes = _nodes(cluster)
+    tp = len(nodes)
+    params = cm.model.total_params
+    dp = min(len(nd) for nd in nodes)
+    m = max(batch // dp, 1)
+    state = params * BYTES_PER_PARAM_STATE / tp
+    t = 0.0
+    for nd in nodes:
+        for r in nd:
+            if state + cm.per_rank[r].memory(min(m, 32)) > \
+                    cm.per_rank[r].mem_cap():
+                return SimResult("hap", oom=True)
+        t = max(t, _stage_time(cm, nd, cm.model.n_layers, m, dp, tp))
+    # cross-node TP all-reduce on the slow inter-node link
+    act = m * cm.model.seq_len * _d_model(cm) * 4
+    t += cm.model.n_layers * 4 * act * 2 * (tp - 1) / tp / \
+        (cluster.link_gbps * 1e9 / 8)
+    return SimResult("hap", batch / t)
+
+
+def simulate_fsdp(cm: ClusterCostModel, batch: int) -> SimResult:
+    from repro.core.planner import plan_even
+    p = plan_even(cm, batch)
+    if not p.feasible:
+        return SimResult("fsdp", oom=True, note=p.infeasible_reason)
+    return SimResult("fsdp", p.predicted_throughput)
+
+
+def simulate_whale(cm: ClusterCostModel, batch: int) -> SimResult:
+    from repro.core.planner import plan_whale
+    p = plan_whale(cm, batch)
+    if not p.feasible:
+        return SimResult("whale", oom=True, note=p.infeasible_reason)
+    return SimResult("whale", p.predicted_throughput)
+
+
+def simulate_cephalo(cm: ClusterCostModel, batch: int) -> SimResult:
+    from repro.core.planner import auto_solve
+    p = auto_solve(cm, batch)
+    if not p.feasible:
+        return SimResult("cephalo", oom=True, note=p.infeasible_reason)
+    return SimResult("cephalo", p.predicted_throughput)

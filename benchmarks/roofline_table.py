@@ -1,0 +1,79 @@
+"""Assemble the §Roofline table from the dry-run JSON records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+ARCH_ORDER = ["mixtral-8x7b", "pixtral-12b", "mamba2-370m", "yi-34b",
+              "gemma-2b", "gemma2-9b", "musicgen-large", "stablelm-1.6b",
+              "qwen3-moe-30b-a3b", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(mesh: str = "pod16x16",
+                 directory: Optional[str] = None) -> List[Dict]:
+    d = directory or DRYRUN_DIR
+    out = []
+    for path in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def rows(mesh: str = "pod16x16") -> List[Dict]:
+    recs = {(r["arch"], r["shape"]): r for r in load_records(mesh)}
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                out.append({"arch": arch, "shape": shape,
+                            "status": "missing"})
+                continue
+            row = {"arch": arch, "shape": shape, "status": r["status"]}
+            if r["status"] == "ok":
+                t = r["roofline_analytic"]
+                ma = r.get("memory_analysis", {})
+                row.update({
+                    "compute_ms": round(t["compute_s"] * 1e3, 2),
+                    "memory_ms": round(t["memory_s"] * 1e3, 2),
+                    "collective_ms": round(t["collective_s"] * 1e3, 2),
+                    "dominant": t["dominant"],
+                    "useful_frac": round(t["useful_fraction"], 2),
+                    "hbm_gib_per_dev": round(
+                        (ma.get("argument_size_in_bytes", 0) +
+                         ma.get("temp_size_in_bytes", 0)) / (1 << 30), 2),
+                    "compile_s": r.get("compile_s"),
+                })
+            elif r["status"] == "skipped":
+                row["reason"] = r["reason"][:60]
+            else:
+                row["error"] = r.get("error", "")[:80]
+            out.append(row)
+    return out
+
+
+def markdown(mesh: str = "pod16x16") -> str:
+    rws = rows(mesh)
+    hdr = ("| arch | shape | status | compute ms | memory ms | "
+           "collective ms | dominant | useful | HBM GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rws:
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r['compute_ms']} | "
+                f"{r['memory_ms']} | {r['collective_ms']} | "
+                f"{r['dominant']} | {r['useful_frac']} | "
+                f"{r['hbm_gib_per_dev']} |")
+        else:
+            note = r.get("reason", r.get("error", ""))
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                         f"{note} | | | | | |")
+    return "\n".join(lines)

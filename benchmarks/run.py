@@ -1,0 +1,103 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the headline
+number for that artifact) followed by the full tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Callable, List
+
+
+def _fmt_table(rows: List[dict]) -> str:
+    if not rows:
+        return "(empty)"
+    keys: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    lines = ["  " + " | ".join(f"{k:>14}" for k in keys)]
+    for r in rows:
+        lines.append("  " + " | ".join(f"{str(r.get(k, '')):>14}"
+                                       for k in keys))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the subprocess/HLO and Cluster-B sections")
+    args = ap.parse_args()
+
+    from benchmarks import grad_accum, model_accuracy, roofline_table
+    from benchmarks import tables as T
+    from benchmarks import uneven_overhead
+
+    sections: List[tuple] = [
+        ("table4_cluster_a", T.table4_cluster_a,
+         lambda rows: f"mean_rel_err={sum(r.get('rel_err', 0) for r in rows if 'rel_err' in r) / max(sum(1 for r in rows if 'rel_err' in r), 1):.3f}"),
+        ("fig7_ablation", T.fig7_ablation,
+         lambda rows: f"rows={len(rows)}"),
+        ("fig9_configs", T.fig9_configs, lambda rows: "see plans below"),
+        ("fig6_scaling", T.fig6_scaling,
+         lambda rows: f"hetero_gain={_hetero_gain(rows)}"),
+        ("fig8_modeled_timeline", grad_accum.modeled_timeline,
+         lambda rows: f"total_speedup={rows[-1]['speedup_vs_fsdp_ga']}x"),
+        ("a3_model_accuracy", model_accuracy.run,
+         lambda rows: f"mean_are={rows[-1]['are']}"),
+        ("appc_padding_model", uneven_overhead.padding_overhead_model,
+         lambda rows: f"max_spmd_overhead={max(r['spmd_padded_overhead'] for r in rows)}"),
+    ]
+    if not args.fast:
+        sections += [
+            ("table5_cluster_b", T.table5_cluster_b,
+             lambda rows: f"rows={len(rows)}"),
+            ("fig8_measured_hlo", grad_accum.measured_collective_bytes,
+             lambda rows: f"rs_ratio={rows[-1].get('reducescatter_count', '?')}"),
+            ("appc_measured_hlo", uneven_overhead.measured_hlo_overhead,
+             lambda rows: f"overhead={rows[-1].get('allgather_bytes', '?')}"),
+        ]
+    sections.append(
+        ("roofline_table", lambda: roofline_table.rows("pod16x16"),
+         lambda rows: f"ok={sum(1 for r in rows if r['status'] == 'ok')}/40"))
+
+    csv_lines = ["name,us_per_call,derived"]
+    details = []
+    for name, fn, derive in sections:
+        t0 = time.time()
+        try:
+            rows = fn()
+            derived = derive(rows)
+        except Exception as e:  # noqa: BLE001
+            rows = [{"error": f"{type(e).__name__}: {e}"}]
+            derived = "ERROR"
+        us = (time.time() - t0) * 1e6
+        csv_lines.append(f"{name},{us:.0f},{derived}")
+        if name == "fig9_configs":
+            details.append(f"\n== {name} ==\n" + "\n\n".join(rows))
+        else:
+            details.append(f"\n== {name} ==\n" + _fmt_table(rows))
+        print(csv_lines[-1], flush=True)
+
+    print("\n".join(details))
+    print("\n--- CSV ---")
+    print("\n".join(csv_lines))
+
+
+def _hetero_gain(rows) -> str:
+    try:
+        base = next(r for r in rows if r["cluster"] == "16xA10G")
+        full = next(r for r in rows if r["cluster"] == "all-64")
+        return f"{full['train_tflops'] / base['train_tflops']:.2f}x"
+    except Exception:  # noqa: BLE001
+        return "?"
+
+
+if __name__ == "__main__":
+    main()

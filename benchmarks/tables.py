@@ -1,0 +1,146 @@
+"""Paper table/figure reproductions (Tables 4, 5, 8; Figs 6, 7, 9).
+
+All comparisons run the Cephalo planner and the baseline simulators on the
+paper's exact clusters (Table 3 specs) and models (Table 2), seq len 512
+(197 for ViTs), full-precision Adam — the paper's Sec. 4.1 setup.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from benchmarks import baselines as BL
+from repro.configs.base import get_arch
+from repro.configs.paper_models import paper_seq_len
+from repro.core import device_specs as D
+from repro.core.cost_model import analytic_cluster_model
+from repro.core.model_stats import build_model_stats
+from repro.core.planner import (auto_solve, plan_compute_only,
+                                plan_memory_only, solve)
+
+TABLE4_MODELS = ["vit-g", "vit-e", "bert-large", "bert-xlarge", "gpt-1.3b",
+                 "gpt-2.7b", "tiny-llama", "llama-3b"]
+
+#: Paper Table 4 Cephalo rows (batch 128 / 256) for accuracy scoring.
+PAPER_TABLE4_CEPHALO = {
+    ("vit-g", 128): 6.38, ("vit-g", 256): 6.41,
+    ("vit-e", 128): 3.02, ("vit-e", 256): 3.23,
+    ("bert-large", 128): 33.56, ("bert-large", 256): 33.69,
+    ("bert-xlarge", 128): 11.47, ("bert-xlarge", 256): 11.72,
+    ("gpt-1.3b", 128): 6.83, ("gpt-1.3b", 256): 7.09,
+    ("gpt-2.7b", 128): 4.57, ("gpt-2.7b", 256): 4.67,
+    ("tiny-llama", 128): 12.58, ("tiny-llama", 256): 12.91,
+    ("llama-3b", 128): 4.51, ("llama-3b", 256): 4.85,
+}
+
+
+def _cm(model: str, cluster):
+    seq = paper_seq_len(model)
+    return analytic_cluster_model(cluster, build_model_stats(
+        get_arch(model), seq))
+
+
+def table4_cluster_a() -> List[Dict]:
+    """Cluster A (8 GPUs): Cephalo vs Megatron-Het/FlashFlex/FSDP/Whale/
+    HAP, batches 128 & 256 — paper Tables 4 + 8."""
+    cluster = D.cluster_a()
+    rows = []
+    for model in TABLE4_MODELS:
+        cm = _cm(model, cluster)
+        for batch in (128, 256):
+            row = {"model": model, "batch": batch}
+            for sim in (BL.simulate_cephalo, BL.simulate_megatron_het,
+                        BL.simulate_flashflex, BL.simulate_fsdp,
+                        BL.simulate_whale, BL.simulate_hap):
+                r = sim(cm, batch)
+                row[r.system] = r.display
+            paper = PAPER_TABLE4_CEPHALO.get((model, batch))
+            if paper:
+                ours = float(row["cephalo"]) \
+                    if row["cephalo"] != "OOM" else 0.0
+                row["paper_cephalo"] = paper
+                row["rel_err"] = round(abs(ours - paper) / paper, 3)
+            rows.append(row)
+    return rows
+
+
+def table5_cluster_b() -> List[Dict]:
+    """Cluster B (64 GPUs): ViT-e / GPT-6.7B / Llama-7B at 512 & 1024."""
+    cluster = D.cluster_b()
+    rows = []
+    paper = {("vit-e", 512): 20.37, ("vit-e", 1024): 26.08,
+             ("gpt-6.7b", 512): 11.62, ("gpt-6.7b", 1024): 17.04,
+             ("llama-7b", 512): 13.12, ("llama-7b", 1024): 17.74}
+    for model in ("vit-e", "gpt-6.7b", "llama-7b"):
+        cm = _cm(model, cluster)
+        for batch in (512, 1024):
+            row = {"model": model, "batch": batch}
+            for sim in (BL.simulate_cephalo, BL.simulate_megatron_het,
+                        BL.simulate_flashflex):
+                r = sim(cm, batch)
+                row[r.system] = r.display
+            row["paper_cephalo"] = paper[(model, batch)]
+            rows.append(row)
+    return rows
+
+
+def fig6_scaling() -> List[Dict]:
+    """Left: TFLOPs as heterogeneous GPUs are added.  Right: Cluster B vs
+    homogeneous 32xA10G."""
+    rows = []
+    model = "gpt-6.7b"
+    variants = [
+        ("16xA10G", D.cluster_b_subset(16, 0, 0)),
+        ("+16xV100", D.cluster_b_subset(16, 16, 0)),
+        ("all-64", D.cluster_b_subset(16, 16, 32)),
+        ("homog-32xA10G", D.homogeneous_a10g(32)),
+    ]
+    for name, cluster in variants:
+        cm = _cm(model, cluster)
+        plan = auto_solve(cm, 512)
+        flops_per_sample = cm.model.flops_fwd_per_sample() * 4
+        tflops = plan.predicted_throughput * flops_per_sample / 1e12 \
+            if plan.feasible else 0.0
+        rows.append({"cluster": name, "model": model,
+                     "samples_s": round(plan.predicted_throughput, 2),
+                     "train_tflops": round(tflops, 1),
+                     "feasible": plan.feasible})
+    return rows
+
+
+def fig7_ablation() -> List[Dict]:
+    """Cephalo vs compute-balance-only vs memory-balance-only vs FSDP
+    across batch sizes (Cluster A)."""
+    cluster = D.cluster_a()
+    rows = []
+    for model in ("vit-e", "gpt-2.7b", "llama-3b"):
+        cm = _cm(model, cluster)
+        for batch in (32, 64, 128, 256):
+            row = {"model": model, "batch": batch}
+            full = solve(cm, batch)
+            row["cephalo"] = f"{full.predicted_throughput:.2f}" \
+                if full.feasible else "OOM"
+            cb = plan_compute_only(cm, batch)
+            row["cephalo-cb"] = f"{cb.predicted_throughput:.2f}" \
+                if cb.feasible else "OOM"
+            mb = plan_memory_only(cm, batch)
+            row["cephalo-mb"] = f"{mb.predicted_throughput:.2f}" \
+                if mb.feasible else "OOM"
+            fsdp = BL.simulate_fsdp(cm, batch)
+            row["fsdp"] = fsdp.display
+            rows.append(row)
+    return rows
+
+
+def fig9_configs() -> List[str]:
+    """Optimized training configurations for ViT-G & Llama-3B on Cluster A
+    at batch 256 (paper Fig. 9)."""
+    out = []
+    for model in ("vit-g", "llama-3b"):
+        cm = _cm(model, D.cluster_a())
+        plan = solve(cm, 256)
+        out.append(plan.summary())
+    return out

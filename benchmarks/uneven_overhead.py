@@ -1,0 +1,102 @@
+"""App. C reproduction: uneven-collective overhead.
+
+The paper measures ≤15% NCCL latency overhead for uneven AllGather /
+ReduceScatter inputs.  Our XLA analogue is padded shards: the wire cost of
+an uneven gather is ``N · P_max`` instead of ``Σ s_i`` bytes.  This
+benchmark computes the padding overhead across random ratio skews and
+checks the layered train step's measured HLO AllGather bytes scale the
+same way (even vs a skewed split, 8 fake devices).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import fsdp
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+_SUBPROC = """
+import jax
+from repro.configs.base import get_arch
+from repro.core.layered_ga import CephaloProgram
+from repro.roofline.analysis import parse_collectives
+cfg = get_arch("stablelm-1.6b").reduced()
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for label, ratios in (("even", None),
+                      ("skew", [0.3, 0.2, 0.15, 0.1, 0.1, 0.05, 0.05, 0.05])):
+    prog = CephaloProgram(cfg, mesh, ratios=ratios, ell=1, m=1, seq=32,
+                          unroll=True)
+    state = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in prog.state_shapes().items()}
+    batch = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+             for k, v in prog.batch_shapes().items()}
+    hlo = jax.jit(prog.build()).lower(state, batch).compile().as_text()
+    c = parse_collectives(hlo)
+    print(f"RESULT {label} {c.bytes_by_op.get('all-gather', 0):.0f}")
+"""
+
+
+def padding_overhead_model(unit: int = 500_000) -> List[Dict]:
+    """Wire overhead of padded-uneven SPMD shards for ACTUAL Cephalo plan
+    ratios (Cluster A, llama-3b/vit-g plans), vs the MPMD runtime which
+    moves exactly Σ s_i bytes (AllGatherv semantics, zero overhead).
+
+    Note the divergence from the paper: NCCL AllGatherv pays ≤15% *latency*
+    overhead moving exact bytes; the XLA SPMD emulation pays
+    ``N·max(s_i)/Σs_i − 1`` *wire* overhead instead (DESIGN.md §7.1).
+    Cephalo's greedy state partition produces mild skews, keeping this
+    bounded.
+    """
+    from repro.configs.base import get_arch
+    from repro.core.cost_model import analytic_cluster_model
+    from repro.core.device_specs import cluster_a
+    from repro.core.model_stats import build_model_stats
+    from repro.core.planner import solve
+
+    rows = []
+    for model in ("llama-3b", "vit-g", "gpt-2.7b"):
+        cm = analytic_cluster_model(cluster_a(),
+                                    build_model_stats(get_arch(model), 512))
+        plan = solve(cm, 256)
+        if not plan.feasible:
+            continue
+        ratios = plan.state_ratios()
+        layout = fsdp.make_layout("u", {"w": np.zeros(unit, np.float32)},
+                                  ratios)
+        wire = plan.n * layout.p_max
+        rows.append({
+            "plan": f"{model}@cluster-a",
+            "max_ratio": round(float(ratios.max()), 3),
+            "spmd_padded_overhead": round(wire / layout.padded - 1.0, 3),
+            "mpmd_overhead": 0.0,
+            "paper_nccl_latency_bound": 0.15,
+        })
+    return rows
+
+
+def measured_hlo_overhead() -> List[Dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    vals = {}
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            _, label, b = line.split()
+            vals[label] = float(b)
+    rows = [{"split": k, "allgather_bytes": v} for k, v in vals.items()]
+    if "even" in vals and "skew" in vals:
+        rows.append({"split": "overhead",
+                     "allgather_bytes": round(
+                         vals["skew"] / vals["even"] - 1.0, 3)})
+    if proc.returncode != 0:
+        rows.append({"split": "ERROR", "stderr": proc.stderr[-400:]})
+    return rows

@@ -1,0 +1,66 @@
+"""Why decoupling matters: Cephalo vs even-split FSDP on a skewed cluster.
+
+    PYTHONPATH=src python examples/hetero_vs_even.py
+
+Reproduces the paper's central claim on a small scale: on a cluster where
+memory capacity does NOT track compute speed (L4 vs P40 — same memory,
+2.6x compute gap), even splitting either OOMs or idles the fast GPUs;
+Cephalo's plan gives fast GPUs more batch and memory-rich GPUs more state.
+Then it actually *trains* both plans on the MPMD runtime and shows the
+gradients are identical (Eq. 1) while the simulated wall-clock differs.
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core.cost_model import analytic_cluster_model
+from repro.core.device_specs import Cluster, L4, P40
+from repro.core.hetero_trainer import HeteroTrainer
+from repro.core.model_stats import build_model_stats
+from repro.core.planner import plan_even, solve
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+SEQ, BATCH = 64, 24
+
+
+def main() -> None:
+    cfg = get_arch("tiny-llama").reduced()
+    # the paper's Fig. 2 mismatch in miniature: L4 fast / P40 roomy
+    cluster = Cluster([L4, L4, P40, P40], link_gbps=50, name="l4-p40")
+    cm = analytic_cluster_model(cluster, build_model_stats(cfg, SEQ))
+
+    cephalo = solve(cm, BATCH)
+    even = plan_even(cm, BATCH)
+    print("=== Cephalo plan ===")
+    print(cephalo.summary())
+    print("\n=== even FSDP plan ===")
+    print(even.summary() if even.feasible else
+          f"infeasible: {even.infeasible_reason}")
+    if even.feasible:
+        speedup = cephalo.predicted_throughput / even.predicted_throughput
+        print(f"\npredicted speedup from decoupling: {speedup:.2f}x")
+
+    # train both for a few steps — losses must match exactly (Eq. 1)
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, SEQ, seed=0))
+    losses = {}
+    for name, plan in (("cephalo", cephalo),) + (
+            (("even", even),) if even.feasible else ()):
+        tr = HeteroTrainer(cfg, plan, AdamConfig(lr=2e-3), seq_len=SEQ)
+        shards = tr.init_shards(jax.random.PRNGKey(0))
+        ls = []
+        for step in range(5):
+            shards, loss = tr.step(shards, stream.sample(step, BATCH))
+            ls.append(loss)
+        losses[name] = ls
+        print(f"{name}: losses {['%.4f' % l for l in ls]}")
+    if "even" in losses:
+        assert np.allclose(losses["cephalo"], losses["even"], atol=1e-3), \
+            "gradient equivalence violated!"
+        print("\nloss trajectories identical — the plans differ only in "
+              "WHERE compute/memory live, not in the math (Eq. 1).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,497 @@
+"""SPMD Cephalo train step: uneven FSDP + layered gradient accumulation.
+
+Builds a ``jax.jit``-able train step that runs inside ``shard_map`` over
+the *flattened* data-parallel axis (every chip is a ZeRO-3 worker; the
+``model`` mesh axis shards state only — paper Sec. 2).  Two schedules:
+
+* ``ga_mode="layered"`` (Cephalo, paper Fig. 4 bottom): one AllGather per
+  unit per forward, one re-gather + one ReduceScatter per unit per
+  backward — all microbatches of a unit run between collectives.  The
+  schedule falls out of the loop structure (unit loop outer, microbatch
+  scan inner) plus full rematerialization (the bwd re-gathers instead of
+  saving gathered params).
+* ``ga_mode="per_microbatch"`` (FSDP-GA baseline, Fig. 4 top): an outer
+  scan over microbatches accumulates gradients; every microbatch pays the
+  full per-unit collective bill — ℓ× the AllGather/ReduceScatter traffic.
+
+Per-device batch layout is the plan's padded grid ``(ell, m, seq)`` with
+Eq. 1 weights zeroing the padding (repro.data.pipeline).
+
+Knobs beyond the paper (recorded separately in EXPERIMENTS.md §Perf):
+``gather_dtype`` (fp32 paper-faithful / bf16 halves collective bytes),
+``remat`` ("full" recompute / "offload" host-offloads boundary
+activations), ``unroll`` (unroll unit loops so HLO collective counts are
+exact for the roofline parser).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import fsdp
+from repro.models import model as M
+from repro.optim.adam import AdamConfig, adam_update
+
+
+# ---------------------------------------------------------------------------
+# Unit grouping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class UnitGroup:
+    """One FSDP unit family: 'embed' / 'head' / 'misc' / 'shared' /
+    'stage<i>' (the latter stacked over the stage's element count)."""
+
+    name: str
+    layout: fsdp.UnitLayout
+    count: int = 1               # >1 → stacked stage unit
+    stage_idx: int = -1          # index into build_stages(cfg)
+
+
+def _split_params(cfg: ArchConfig, params: Dict[str, Any]
+                  ) -> Dict[str, Any]:
+    """Regroup model params into unit trees."""
+    groups: Dict[str, Any] = {"embed": {"embed": params["embed"]}}
+    if "head" in params:
+        groups["head"] = {"head": params["head"]}
+    misc = {"final_norm": params["final_norm"]}
+    for k in ("pos_embed", "frontend_proj"):
+        if k in params:
+            misc[k] = params[k]
+    groups["misc"] = misc
+    if "shared" in params:
+        groups["shared"] = params["shared"]
+    for i, sp in enumerate(params["stages"]):
+        groups[f"stage{i}"] = sp
+    return groups
+
+
+def _element_tree(stacked: Any) -> Any:
+    """First element of a stacked stage tree (shapes without leading dim)."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+        if isinstance(a, jax.ShapeDtypeStruct) else a[0], stacked)
+
+
+class CephaloProgram:
+    """Everything needed to build/run the SPMD train step for one arch."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh,
+                 ratios: Optional[Sequence[float]] = None,
+                 ell: int = 1, m: int = 1, seq: int = 512,
+                 ga_mode: str = "layered",
+                 gather_dtype: str = "float32",
+                 grad_dtype: str = "float32",
+                 remat: str = "full",
+                 unroll: bool = False,
+                 adam: AdamConfig = AdamConfig(),
+                 ce_chunk: int = 512,
+                 has_frontend_batch: bool = False,
+                 state_axes: Optional[Sequence[str]] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = tuple(mesh.axis_names)
+        # HSDP (beyond-paper): shard state over a SUBSET of mesh axes and
+        # replicate across the rest — 16-deep gather rings instead of
+        # 256-deep, at a replication-factor memory cost.  Default: pure
+        # ZeRO-3 over all axes (the paper's design point).
+        self.state_axes = tuple(state_axes) if state_axes is not None \
+            else self.axes
+        self.replica_axes = tuple(a for a in self.axes
+                                  if a not in self.state_axes)
+        self.n = int(np.prod(mesh.devices.shape))
+        self.n_state = int(np.prod([mesh.shape[a]
+                                    for a in self.state_axes]))
+        self.ratios = list(ratios) if ratios is not None \
+            else [1.0 / self.n_state] * self.n_state
+        assert len(self.ratios) == self.n_state
+        self.ell, self.m, self.seq = ell, m, seq
+        self.ga_mode = ga_mode
+        self.gather_dtype = jnp.bfloat16 if gather_dtype == "bfloat16" \
+            else jnp.float32
+        self.grad_dtype = jnp.bfloat16 if grad_dtype == "bfloat16" \
+            else jnp.float32
+        self.remat = remat
+        self.unroll = unroll
+        self.adam = adam
+        self.ce_chunk = ce_chunk
+        self.has_frontend = bool(cfg.frontend_dim) and has_frontend_batch
+        self.stages = M.build_stages(cfg)
+        self.groups = self._build_groups()
+
+    # --- layouts ----------------------------------------------------------
+    def _build_groups(self) -> List[UnitGroup]:
+        key = jax.random.PRNGKey(0)
+        shapes = jax.eval_shape(lambda: M.init_params(self.cfg, key))
+        grouped = _split_params(self.cfg, shapes)
+        out: List[UnitGroup] = []
+        for name, tree in grouped.items():
+            if name.startswith("stage"):
+                idx = int(name[len("stage"):])
+                elem = _element_tree(tree)
+                layout = fsdp.make_layout(name, elem, self.ratios)
+                out.append(UnitGroup(name, layout,
+                                     count=self.stages[idx].count,
+                                     stage_idx=idx))
+            else:
+                layout = fsdp.make_layout(name, tree, self.ratios)
+                out.append(UnitGroup(name, layout))
+        return out
+
+    def group(self, name: str) -> UnitGroup:
+        for g in self.groups:
+            if g.name == name:
+                return g
+        raise KeyError(name)
+
+    def has_group(self, name: str) -> bool:
+        return any(g.name == name for g in self.groups)
+
+    # --- state ------------------------------------------------------------
+    def state_shapes(self) -> Dict[str, Any]:
+        """Global (pre-shard_map) array shapes for the training state."""
+        out: Dict[str, Any] = {"step": jax.ShapeDtypeStruct((), jnp.int32)}
+        for g in self.groups:
+            shape = (g.count, self.n_state * g.layout.p_max) \
+                if g.count > 1 else (self.n_state * g.layout.p_max,)
+            for part in ("p", "m", "v"):
+                out[f"{g.name}/{part}"] = jax.ShapeDtypeStruct(
+                    shape, jnp.float32)
+        return out
+
+    def state_shardings(self) -> Dict[str, Any]:
+        def spec(g: UnitGroup):
+            return P(None, self.state_axes) if g.count > 1 \
+                else P(self.state_axes)
+        out = {"step": NamedSharding(self.mesh, P())}
+        for g in self.groups:
+            s = NamedSharding(self.mesh, spec(g))
+            for part in ("p", "m", "v"):
+                out[f"{g.name}/{part}"] = s
+        return out
+
+    def batch_shapes(self) -> Dict[str, Any]:
+        b = (self.n, self.ell, self.m, self.seq)
+        out = {
+            "tokens": jax.ShapeDtypeStruct(b, jnp.int32),
+            "labels": jax.ShapeDtypeStruct(b, jnp.int32),
+            "weights": jax.ShapeDtypeStruct(b, jnp.float32),
+        }
+        if self.has_frontend:
+            out["frontend_embed"] = jax.ShapeDtypeStruct(
+                b + (self.cfg.frontend_dim,), jnp.float32)
+        return out
+
+    def batch_shardings(self) -> Dict[str, Any]:
+        s = NamedSharding(self.mesh, P(self.axes))
+        return {k: s for k in self.batch_shapes()}
+
+    def init_state(self, key: jax.Array) -> Dict[str, jax.Array]:
+        """Materialize real state (small models / examples only)."""
+        params = M.init_params(self.cfg, key)
+        grouped = _split_params(self.cfg, params)
+        out: Dict[str, jax.Array] = {"step": jnp.int32(0)}
+        for g in self.groups:
+            tree = grouped[g.name]
+            if g.count > 1:
+                flats = []
+                for i in range(g.count):
+                    elem = jax.tree.map(lambda a: a[i], tree)
+                    flats.append(fsdp.flatten_unit(g.layout, elem))
+                flat = jnp.stack(flats)          # (count, padded)
+                shard_stack = jnp.stack(
+                    [jnp.concatenate(fsdp.shard_unit(g.layout, f))
+                     for f in flat])             # (count, N*P_max)
+                out[f"{g.name}/p"] = shard_stack
+                zeros = jnp.zeros_like(shard_stack)
+            else:
+                flat = fsdp.flatten_unit(g.layout, tree)
+                shard_vec = jnp.concatenate(fsdp.shard_unit(g.layout, flat))
+                out[f"{g.name}/p"] = shard_vec
+                zeros = jnp.zeros_like(shard_vec)
+            out[f"{g.name}/m"] = zeros
+            out[f"{g.name}/v"] = jnp.array(zeros)
+        shardings = self.state_shardings()
+        return {k: jax.device_put(v, shardings[k]) for k, v in out.items()}
+
+    def gather_params(self, state: Dict[str, jax.Array]) -> Dict[str, Any]:
+        """Host-side: reassemble the full model params pytree (tests)."""
+        grouped: Dict[str, Any] = {}
+        for g in self.groups:
+            buf = np.asarray(state[f"{g.name}/p"])
+            if g.count > 1:
+                elems = []
+                for i in range(g.count):
+                    flat = self._unshard_host(g.layout, buf[i])
+                    elems.append(fsdp.unflatten_unit(g.layout, flat))
+                grouped[g.name] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *elems)
+            else:
+                flat = self._unshard_host(g.layout, buf)
+                grouped[g.name] = fsdp.unflatten_unit(g.layout, flat)
+        params: Dict[str, Any] = {
+            "embed": grouped["embed"]["embed"],
+            "final_norm": grouped["misc"]["final_norm"],
+        }
+        for k in ("pos_embed", "frontend_proj"):
+            if k in grouped["misc"]:
+                params[k] = grouped["misc"][k]
+        if "head" in grouped:
+            params["head"] = grouped["head"]["head"]
+        if "shared" in grouped:
+            params["shared"] = grouped["shared"]
+        params["stages"] = [grouped[f"stage{i}"]
+                            for i in range(len(self.stages))]
+        return params
+
+    def _unshard_host(self, layout: fsdp.UnitLayout,
+                      buf: np.ndarray) -> jnp.ndarray:
+        stacked = buf.reshape(self.n_state, layout.p_max)
+        parts = [stacked[i, : layout.shard_sizes[i]]
+                 for i in range(self.n_state)]
+        return jnp.asarray(np.concatenate(parts))
+
+    # -----------------------------------------------------------------
+    # The step itself
+    # -----------------------------------------------------------------
+    def _gather(self, g: UnitGroup, shard: jax.Array) -> Any:
+        # bf16 gathers halve the AllGather wire bytes (beyond-paper knob;
+        # fp32 is the paper-faithful default); the grad ReduceScatter
+        # precision is independent (fsdp.make_mixed_gather custom_vjp).
+        fn = fsdp.make_mixed_gather(g.layout, self.state_axes,
+                                    self.gather_dtype, self.grad_dtype,
+                                    replica_axes=self.replica_axes)
+        full = fn(shard)
+        return fsdp.unflatten_unit(g.layout, full, dtype=self.gather_dtype)
+
+    def _apply_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "offload":
+            from jax.ad_checkpoint import checkpoint_policies as cp
+            policy = cp.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["boundary"],
+                offload_src="device", offload_dst="pinned_host")
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    def _loss_from_shards(self, pshards: Dict[str, jax.Array],
+                          tokens, labels, weights, frontend
+                          ) -> jax.Array:
+        """Forward + loss for this device's (ell, m, seq) grid, collectives
+        inside.  Differentiating w.r.t. pshards yields one ReduceScatter
+        per unit gather."""
+        cfg = self.cfg
+        cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        positions = jnp.broadcast_to(
+            jnp.arange(self.seq, dtype=jnp.int32)[None],
+            (self.m, self.seq))
+
+        embed_g = self.group("embed")
+        misc_g = self.group("misc")
+
+        def embed_fn(eshard, mshard, toks, fe):
+            etree = self._gather(embed_g, eshard)
+            mtree = self._gather(misc_g, mshard)
+
+            def one(tok_mb, fe_mb):
+                p = {"embed": etree["embed"], **mtree}
+                return M.embed_tokens(cfg, p, tok_mb, positions, fe_mb)
+
+            if fe is None:
+                return jax.vmap(lambda t: one(t, None))(toks)
+            return jax.vmap(one)(toks, fe)
+
+        x_all = self._apply_remat(embed_fn)(
+            pshards["embed"], pshards["misc"], tokens,
+            frontend.astype(cdt) if frontend is not None else None)
+        x_all = x_all.astype(cdt)
+        aux = jnp.float32(0.0)
+
+        shared_tree = None
+        if self.has_group("shared"):
+            sh_g = self.group("shared")
+            shared_tree = jax.tree.map(
+                lambda a: a.astype(cdt),
+                self._gather(sh_g, pshards["shared"]))
+
+        for g in self.groups:
+            if g.stage_idx < 0:
+                continue
+            spec = self.stages[g.stage_idx]
+            shard_stack = pshards[g.name]          # (count, P_max)
+
+            def elem_body(carry, elem_shard, _g=g, _spec=spec):
+                x_all, aux = carry
+                w_tree = jax.tree.map(
+                    lambda a: a.astype(cdt), self._gather(_g, elem_shard))
+
+                def mb_body(_, x_mb):
+                    y, a = M.element_apply(cfg, _spec, w_tree, x_mb,
+                                           positions, shared_tree)
+                    return None, (y, a)
+
+                _, (ys, auxs) = jax.lax.scan(mb_body, None, x_all)
+                return (ys, aux + jnp.sum(auxs)), None
+
+            body = self._apply_remat(elem_body)
+            (x_all, aux), _ = jax.lax.scan(
+                body, (x_all, aux), shard_stack,
+                unroll=g.count if self.unroll else 1)
+
+        # head / loss: gather once, CE over all microbatches (layered)
+        def head_fn(eshard, mshard, hshard, x_all):
+            etree = self._gather(embed_g, eshard)
+            mtree = self._gather(misc_g, mshard)
+            p = {"embed": etree["embed"], **mtree}
+            if hshard is not None:
+                p["head"] = self._gather(self.group("head"), hshard)["head"]
+
+            def mb_ce(x_mb, y_mb, w_mb):
+                return M.chunked_ce(cfg, p, x_mb, y_mb, w_mb, self.ce_chunk)
+
+            return jnp.sum(jax.vmap(mb_ce)(x_all, labels, weights))
+
+        hshard = pshards.get("head")
+        ce = self._apply_remat(head_fn)(
+            pshards["embed"], pshards["misc"], hshard, x_all)
+        return ce + cfg.router_aux_coef * aux
+
+    def _device_step(self, *flat_args):
+        """Runs inside shard_map.  Args: state leaves + batch leaves."""
+        names = self._state_names()
+        nstate = len(names)
+        state = dict(zip(names, flat_args[:nstate]))
+        batch = dict(zip(self._batch_names(), flat_args[nstate:]))
+        # squeeze the rank dim the shard_map sharding leaves as 1
+        tokens = batch["tokens"][0]
+        labels = batch["labels"][0]
+        weights = batch["weights"][0]
+        frontend = batch.get("frontend_embed")
+        if frontend is not None:
+            frontend = frontend[0]
+
+        pshards = {g.name: state[f"{g.name}/p"] for g in self.groups}
+
+        if self.ga_mode == "layered":
+            loss, grads = jax.value_and_grad(
+                lambda ps: self._loss_from_shards(ps, tokens, labels,
+                                                  weights, frontend)
+            )(pshards)
+        elif self.ga_mode == "per_microbatch":
+            # FSDP-GA baseline: one full fwd+bwd per microbatch, grads
+            # accumulated — ℓ× the collective traffic.
+            def one_mb(i, loss_acc):
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, 0)
+                t, l_, w = sl(tokens), sl(labels), sl(weights)
+                f = sl(frontend) if frontend is not None else None
+                # FSDP reshards (frees) gathered params after each
+                # microbatch; the barrier ties this microbatch's gathers
+                # to the running accumulator so XLA cannot CSE the
+                # re-gathers away when the loop is unrolled.
+                ps, _ = jax.lax.optimization_barrier((pshards, loss_acc))
+                return jax.value_and_grad(
+                    lambda p: self._loss_from_shards(p, t, l_, w, f)
+                )(ps)
+
+            def scan_body(carry, i):
+                loss_acc, gacc = carry
+                li, gi = one_mb(i, loss_acc)
+                gacc = jax.tree.map(jnp.add, gacc, gi)
+                return (loss_acc + li, gacc), None
+
+            zero_g = jax.tree.map(jnp.zeros_like, pshards)
+            (loss, grads), _ = jax.lax.scan(
+                scan_body, (jnp.float32(0.0), zero_g),
+                jnp.arange(self.ell),
+                unroll=self.ell if self.unroll else 1)
+        else:
+            raise ValueError(self.ga_mode)
+
+        # Adam on local shards (ZeRO-3: fully local update)
+        new_state = {"step": state["step"] + 1}
+        for g in self.groups:
+            p = state[f"{g.name}/p"]
+            gm = state[f"{g.name}/m"]
+            gv = state[f"{g.name}/v"]
+            gr = grads[g.name].astype(jnp.float32)
+            np_, nm, nv = adam_update(self.adam, p, gr, gm, gv,
+                                      state["step"] + 1)
+            new_state[f"{g.name}/p"] = np_
+            new_state[f"{g.name}/m"] = nm
+            new_state[f"{g.name}/v"] = nv
+        return tuple(new_state[k] for k in names) + (loss,)
+
+    def _state_names(self) -> List[str]:
+        names = ["step"]
+        for g in self.groups:
+            names += [f"{g.name}/p", f"{g.name}/m", f"{g.name}/v"]
+        return names
+
+    def _batch_names(self) -> List[str]:
+        names = ["tokens", "labels", "weights"]
+        if self.has_frontend:
+            names.append("frontend_embed")
+        return names
+
+    # --- public: the jitted step ------------------------------------------
+    def build(self) -> Callable:
+        shard_map = jax.shard_map
+
+        names = self._state_names()
+        bnames = self._batch_names()
+
+        def state_spec(name: str) -> P:
+            if name == "step":
+                return P()
+            gname = name.split("/")[0]
+            g = self.group(gname)
+            return P(None, self.state_axes) if g.count > 1 \
+                else P(self.state_axes)
+
+        in_specs = tuple(state_spec(n) for n in names) + \
+            tuple(P(self.axes) for _ in bnames)
+        out_specs = tuple(state_spec(n) for n in names) + (P(),)
+
+        def wrapped(*args):
+            outs = self._device_step(*args)
+            # loss: every device computed its local Σ w·ce; reduce to the
+            # true global loss for logging
+            *state_out, loss = outs
+            loss = jax.lax.psum(loss, self.axes)
+            return tuple(state_out) + (loss,)
+
+        sharded = shard_map(wrapped, mesh=self.mesh,
+                            in_specs=in_specs, out_specs=out_specs,
+                            check_vma=False)
+
+        def step(state: Dict[str, jax.Array],
+                 batch: Dict[str, jax.Array]):
+            args = tuple(state[n] for n in names) + \
+                tuple(batch[n] for n in bnames)
+            outs = sharded(*args)
+            new_state = dict(zip(names, outs[:-1]))
+            return new_state, outs[-1]
+
+        return step
+
+    def jit_step(self) -> Callable:
+        step = self.build()
+        state_sh = self.state_shardings()
+        batch_sh = self.batch_shardings()
+        in_sh = ({k: state_sh[k] for k in self._state_names()},
+                 {k: batch_sh[k] for k in self._batch_names()})
+        out_sh = ({k: state_sh[k] for k in self._state_names()},
+                  NamedSharding(self.mesh, P()))
+        return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(0,))

@@ -1,0 +1,138 @@
+"""Profiler (paper Sec. 3.1): measure single-layer latency at small batch
+sizes, fit the linear models the optimizer consumes.
+
+On the paper's clusters this runs a few iterations per GPU.  In this
+container the *measured* mode times the real jitted layer on the host CPU
+— which validates the whole fit→predict machinery (App. A.3 reproduction)
+— while the cluster experiments use :func:`analytic_latency_model`
+rescaled by device specs (DESIGN.md §2 profiler row).
+
+Memory profiling note: CUDA exposes per-device allocator stats; XLA:CPU
+does not.  The measured mode therefore pairs measured latency with the
+*analytic* memory model — the paper's memory model is linear-in-m with
+coefficients from activation byte counts, which we can compute exactly.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.cost_model import LatencyModel, MemoryModel
+from repro.core.model_stats import build_model_stats
+from repro.models import blocks as B
+from repro.models import model as M
+
+
+def profile_layer_forward(cfg: ArchConfig, seq: int,
+                          ms: Sequence[int] = (1, 2, 3, 4, 6, 8),
+                          repeats: int = 3) -> List[Tuple[int, float]]:
+    """Measured (m, seconds) samples for one block's forward pass."""
+    key = jax.random.PRNGKey(0)
+    stages = M.build_stages(cfg)
+    spec = stages[0]
+    bp = M._element_init(key, cfg, spec)
+    shared = B.dense_block_init(key, cfg) if cfg.is_hybrid else None
+
+    out = []
+    for m in ms:
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, seq, cfg.d_model),
+                              jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (m, seq))
+        fn = jax.jit(lambda p, xx: M.element_apply(
+            cfg, spec, p, xx, pos, shared)[0])
+        fn(bp, x).block_until_ready()   # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(bp, x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        out.append((m, best))
+    return out
+
+
+def profile_layer_backward(cfg: ArchConfig, seq: int,
+                           ms: Sequence[int] = (1, 2, 3, 4, 6, 8),
+                           repeats: int = 3) -> List[Tuple[int, float]]:
+    key = jax.random.PRNGKey(0)
+    stages = M.build_stages(cfg)
+    spec = stages[0]
+    bp = M._element_init(key, cfg, spec)
+    shared = B.dense_block_init(key, cfg) if cfg.is_hybrid else None
+
+    out = []
+    for m in ms:
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, seq, cfg.d_model),
+                              jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (m, seq))
+
+        def loss(p, xx):
+            y, _ = M.element_apply(cfg, spec, p, xx, pos, shared)
+            return jnp.sum(y * y)
+
+        fn = jax.jit(jax.grad(loss))
+        jax.block_until_ready(fn(bp, x))
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(bp, x))
+            best = min(best, time.perf_counter() - t0)
+        out.append((m, best))
+    return out
+
+
+def fit_latency(samples: Sequence[Tuple[int, float]]) -> LatencyModel:
+    ms, ts = zip(*samples)
+    return LatencyModel(ms, ts)
+
+
+def analytic_memory(cfg: ArchConfig, seq: int) -> MemoryModel:
+    stats = build_model_stats(cfg, seq)
+    per_sample = sum(s.act_bytes * c for s, c in stats.layers) + \
+        max((s.workspace_bytes for s, _ in stats.layers), default=0)
+    return MemoryModel(1.5 * (1 << 30), per_sample)
+
+
+def profiled_cluster_model(cluster, cfg: ArchConfig, seq: int,
+                           ms: Sequence[int] = (1, 2, 3, 4, 6),
+                           repeats: int = 3):
+    """The paper's full workflow with REAL measurements: profile one layer
+    on this host, fit the piecewise-linear models, and rescale per device
+    by peak-FLOPs ratio (each GPU's own profile in the paper; one host
+    profile × spec ratios here — DESIGN.md §2 profiler row).
+
+    Returns a :class:`~repro.core.cost_model.ClusterCostModel` the planner
+    consumes exactly like the analytic one.
+    """
+    from repro.core.cost_model import (ClusterCostModel, CommModel,
+                                       DeviceCost, LatencyModel,
+                                       analytic_latency_model)
+    from repro.core.model_stats import build_model_stats as bms
+
+    stats = bms(cfg, seq)
+    fwd_samples = profile_layer_forward(cfg, seq, ms=ms, repeats=repeats)
+    bwd_samples = profile_layer_backward(cfg, seq, ms=ms, repeats=repeats)
+    # host throughput estimate from the largest profiled point
+    m_big, t_big = fwd_samples[-1]
+    host_flops = stats.flops_fwd_per_sample() / max(stats.n_layers, 1) \
+        * m_big / t_big
+
+    per_rank = []
+    mem = analytic_memory(cfg, seq)
+    head_flops = stats.head_flops_fwd_per_sample() * 4.0
+    for spec in cluster.devices:
+        scale = host_flops / spec.peak_flops / 0.45   # spec at ~45% MFU
+        t_fwd = LatencyModel([m for m, _ in fwd_samples],
+                             [t * scale for _, t in fwd_samples])
+        t_bwd = LatencyModel([m for m, _ in bwd_samples],
+                             [t * scale for _, t in bwd_samples])
+        t_head = analytic_latency_model(head_flops, seq, spec) \
+            if head_flops else None
+        per_rank.append(DeviceCost(spec, t_fwd, t_bwd, mem, t_head))
+    comm = CommModel(link_gbps=cluster.link_gbps * cluster.link_efficiency,
+                     n=cluster.n)
+    return ClusterCostModel(cluster, stats, per_rank, comm)

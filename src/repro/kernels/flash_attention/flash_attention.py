@@ -1,0 +1,140 @@
+"""Flash attention Pallas TPU kernel.
+
+Online-softmax attention tiled for VMEM: the grid iterates
+``(batch, q_head, q_block, kv_block)`` with the KV dimension innermost and
+sequential; running ``(max, sum, acc)`` state lives in VMEM scratch across
+KV steps.  Q/K/V tiles stream HBM→VMEM via BlockSpec; the two matmuls per
+tile hit the MXU with 128-aligned shapes.
+
+Supports causal masking, sliding windows, logit softcaps, and GQA
+(``q_heads = kv_heads * rep``; the K/V BlockSpec index maps fold the
+repetition, so KV tiles are fetched once per group, not per q-head).
+
+TPU adaptation notes (DESIGN.md §2): block shapes default to
+(128, 128) — MXU-native; KV tiles that the causal/window mask kills
+entirely are skipped with ``pl.when``, pruning both compute and the tile's
+VMEM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_kv: int, kv_blocks: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    q_end = q_start + block_q - 1
+    kv_start = ki * block_kv
+    kv_end = kv_start + block_kv - 1
+
+    # Tile liveness: skip KV tiles the mask kills entirely.
+    live = kv_start < kv_len
+    if causal:
+        live = jnp.logical_and(live, kv_start <= q_end)
+    if window > 0:
+        live = jnp.logical_and(live, q_start - kv_end < window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)            # (bq, d)
+        k = k_ref[...].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[...].astype(jnp.float32)            # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_kv), 0)
+        kp = kv_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_kv), 1)
+        mask = kp < kv_len
+        if causal:
+            mask &= kp <= qp
+        if window > 0:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = (l_prev * alpha + p.sum(axis=1))[:, None]
+        m_scr[...] = m_new[:, None]
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...][:, 0], 1e-30)
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0,
+                           kv_len: int | None = None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D);  k, v: (B, KV, Sk, D).  Returns (B, H, Sq, D).
+
+    Sq/Sk must be multiples of the block sizes (ops.py pads).
+    """
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    rep = h // kvh
+    if kv_len is None:
+        kv_len = sk
+    q_blocks = sq // block_q
+    kv_blocks = sk // block_kv
+    scale = d ** -0.5
+
+    grid = (b, h, q_blocks, kv_blocks)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, kv_blocks=kv_blocks,
+        kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, block_kv, d),
+                         lambda bi, hi, qi, ki, _rep=rep:
+                         (bi, hi // _rep, ki, 0)),
+            pl.BlockSpec((None, None, block_kv, d),
+                         lambda bi, hi, qi, ki, _rep=rep:
+                         (bi, hi // _rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Jit'd public wrapper around the flash attention Pallas kernel.
+
+Handles padding to block multiples, dtype plumbing, and the
+``interpret=True`` CPU validation path (this container has no TPU; the
+kernel body executes in the Pallas interpreter and is asserted against
+:mod:`.ref` by the tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_kernel
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                              "block_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Flash attention on (B, H, Sq, D) queries / (B, KV, Sk, D) keys.
+
+    GQA when H > KV (H must be a multiple of KV).  ``window > 0`` enables
+    sliding-window masking; ``softcap`` the gemma2-style logit cap.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, max(sq, 8))
+    bkv = min(block_kv, max(sk, 8))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bkv)
+    vp = _pad_to(v, 2, bkv)
+    out = flash_attention_kernel(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        kv_len=sk, block_q=bq, block_kv=bkv, interpret=interpret)
+    return out[:, :, :sq]

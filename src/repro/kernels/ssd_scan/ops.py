@@ -1,0 +1,28 @@
+"""Jit'd public wrapper around the SSD scan Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """SSD scan.  x: (B, H, L, P); dt: (B, H, L); a: (H,); b/c: (B, L, N)."""
+    l = x.shape[2]
+    ch = min(chunk, max(l, 8))
+    rem = l % ch
+    if rem:
+        pad = ch - rem
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    out = ssd_scan_kernel(x, dt, a, b, c, chunk=ch, interpret=interpret)
+    return out[:, :, :l]

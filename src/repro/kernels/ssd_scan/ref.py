@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel.
+
+Sequential state-space recurrence, one step at a time — the slowest but
+most obviously correct form.  Layout matches the kernel:
+x (B, H, L, P), dt (B, H, L), a (H,) negative, b/c (B, L, N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array,
+                  b: jax.Array, c: jax.Array) -> jax.Array:
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    hs0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hs, t):
+        xt = x[:, :, t].astype(jnp.float32)            # (B,H,P)
+        dtt = dt[:, :, t].astype(jnp.float32)          # (B,H)
+        bt = b[:, t].astype(jnp.float32)               # (B,N)
+        ct = c[:, t].astype(jnp.float32)               # (B,N)
+        decay = jnp.exp(dtt * a)[..., None, None]
+        upd = dtt[..., None, None] * xt[..., :, None] * bt[:, None, None, :]
+        hs = hs * decay + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hs, ct)
+        return hs, yt
+
+    _, ys = jax.lax.scan(step, hs0, jnp.arange(l))
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)    # (B,H,L,P)

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run sets
+``--xla_force_host_platform_device_count`` *before* first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for multi-device CPU tests (8 fake host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def axis_size(mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size

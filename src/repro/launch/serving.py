@@ -1,0 +1,241 @@
+"""Serving path: GSPMD tensor-parallel prefill and decode.
+
+Cephalo is a *training* system; the serving shapes (prefill_32k,
+decode_32k, long_500k) use standard inference sharding instead
+(DESIGN.md §5):
+
+* weights resident, tensor-parallel over the ``model`` axis (heads / d_ff /
+  experts), batch over the data axes — per-leaf rules in
+  :func:`param_shardings`;
+* KV caches sharded over batch (when it divides) and over *sequence* on
+  the ``model`` axis — GSPMD decomposes softmax/attention reductions over
+  the sharded sequence dimension into partial-sum collectives
+  automatically (the flash-decoding pattern);
+* sub-axis-size dims are left replicated (GSPMD pads non-divisible dims,
+  but refuses dim < axis size).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+
+
+def _axes_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, axis, dim: int):
+    """Use ``axis`` for a dim only if the dim divides evenly over it
+    (GSPMD jit arguments require divisible shardings)."""
+    n = _axes_size(mesh, axis)
+    return axis if dim >= n and dim % n == 0 else None
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if isinstance(p, DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            out.append(f"[{p.idx}]")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (rule-based, per leaf)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(mesh: Mesh, names: list, shape: Tuple[int, ...]) -> P:
+    name = names[-1]
+    parents = set(names[:-1])
+    nd = len(shape)
+
+    def at(pos: int, axis="model") -> Optional[P]:
+        """'model' at dim ``pos`` counted from the END (None if the dim
+        does not divide — caller can try another dim)."""
+        idx = nd + pos if pos < 0 else pos
+        n = _axes_size(mesh, axis)
+        if shape[idx] < n or shape[idx] % n != 0:
+            return None
+        spec = [None] * nd
+        spec[idx] = axis
+        return P(*spec)
+
+    def first(*cands) -> P:
+        for c in cands:
+            if c is not None:
+                return c
+        return P()
+
+    if name == "embed":
+        return first(at(0), at(-1))       # vocab rows, else d_model
+    if name == "head":
+        return first(at(-1), at(-2))      # (D, V) → V, else D
+    if name in ("pos_embed", "frontend_proj"):
+        return P()
+    if name in ("wq", "wk", "wv"):
+        return first(at(-2), at(-1))      # heads, else head_dim
+    if name == "wo":
+        return first(at(-3), at(-1))      # heads, else d_model
+    if name in ("w_gate", "w_up"):
+        if "moe" in parents:
+            return first(at(-3), at(-1))  # experts, else d_ff
+        return first(at(-1))              # d_ff
+    if name == "w_down":
+        if "moe" in parents:
+            return first(at(-3), at(-2))  # experts, else d_ff
+        return first(at(-2))              # d_ff
+    if name == "router":
+        return P()
+    if name == "b_up":
+        return first(at(-1))
+    if name in ("in_proj", "conv_w"):
+        return first(at(-1))              # conv channels / proj out
+    if name == "conv_b":
+        return first(at(-1))
+    if name == "out_proj":
+        return first(at(-2))              # d_inner
+    return P()                            # norms, biases, scalars
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh) -> Any:
+    """NamedSharding pytree matching ``M.init_params(cfg, ...)``."""
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def one(path, leaf):
+        spec = _leaf_spec(mesh, _path_names(path), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, batch: int,
+                    max_len: int) -> Any:
+    """NamedSharding pytree matching ``M.init_cache(cfg, batch, max_len)``.
+
+    Batch over the data axes when it divides; sequence (and SSM heads)
+    over 'model'.  For batch < data size, sequence shards over *all* axes
+    (the long_500k single-sequence case)."""
+    data_ax = tuple(a for a in mesh.axis_names if a != "model")
+    bspec = _maybe(mesh, data_ax, batch)
+    sspec_kv = "model" if bspec is not None \
+        else tuple(list(data_ax) + ["model"])
+
+    shapes = jax.eval_shape(lambda: M.init_cache(cfg, batch, max_len))
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "pos"):     # (L, B, S, [KV, hd])
+            spec = [None] * nd
+            spec[1] = _maybe(mesh, data_ax, leaf.shape[1]) \
+                if bspec is not None else None
+            spec[2] = _maybe(mesh, sspec_kv, leaf.shape[2])
+            return NamedSharding(mesh, P(*spec))
+        if name == "h":                   # (..., B, H, P, N)
+            spec = [None] * nd
+            spec[nd - 4] = _maybe(mesh, data_ax, leaf.shape[nd - 4]) \
+                if bspec is not None else None
+            spec[nd - 3] = _maybe(mesh, "model", leaf.shape[nd - 3])
+            return NamedSharding(mesh, P(*spec))
+        if name == "conv":                # (..., B, W-1, Cd)
+            spec = [None] * nd
+            spec[nd - 3] = _maybe(mesh, data_ax, leaf.shape[nd - 3]) \
+                if bspec is not None else None
+            spec[nd - 1] = _maybe(mesh, "model", leaf.shape[nd - 1])
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def batch_sharding(mesh: Mesh, batch: int) -> Tuple[Any, Any]:
+    data_ax = tuple(a for a in mesh.axis_names if a != "model")
+    bspec = _maybe(mesh, data_ax, batch)
+    return (NamedSharding(mesh, P(bspec, None)),
+            NamedSharding(mesh, P(bspec)))
+
+
+def serving_param_shapes(cfg: ArchConfig) -> Any:
+    """Serving keeps weights resident in bf16 (inference does not need the
+    fp32 master copies; DESIGN.md §5)."""
+    shapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    p_sh = param_shardings(cfg, mesh)
+    tok_sh, _ = batch_sharding(mesh, shape.global_batch)
+    c_sh = cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+    logits_sh = NamedSharding(mesh, P())
+
+    def fn(params, tokens):
+        return M.prefill(cfg, params, tokens, max_len=shape.seq_len)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh),
+                     out_shardings=(logits_sh, c_sh))
+    args = (
+        _shapes_with_sharding(serving_param_shapes(cfg), p_sh),
+        jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                             jnp.int32, sharding=tok_sh),
+    )
+    return jitted, args
+
+
+def build_decode(cfg: ArchConfig, mesh: Mesh, shape: InputShape):
+    """One-token serve step with a seq_len-deep cache."""
+    p_sh = param_shardings(cfg, mesh)
+    tok_sh, pos_sh = batch_sharding(mesh, shape.global_batch)
+    c_sh = cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+    logits_sh = NamedSharding(mesh, P())
+
+    def fn(params, caches, tokens, positions):
+        return M.decode_step(cfg, params, caches, tokens, positions)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(1,))
+    b = shape.global_batch
+    args = (
+        _shapes_with_sharding(serving_param_shapes(cfg), p_sh),
+        _shapes_with_sharding(
+            jax.eval_shape(lambda: M.init_cache(cfg, b, shape.seq_len)),
+            c_sh),
+        jax.ShapeDtypeStruct((b, 1), jnp.int32, sharding=tok_sh),
+        jax.ShapeDtypeStruct((b,), jnp.int32, sharding=pos_sh),
+    )
+    return jitted, args
+
+
+def _shapes_with_sharding(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

@@ -1,0 +1,135 @@
+"""Training launcher.
+
+Two modes:
+
+* ``--runtime spmd`` — the Cephalo SPMD step on a jax mesh (homogeneous
+  pods; the production path).  Device count comes from the environment.
+* ``--runtime mpmd`` — the heterogeneous MPMD loopback runtime: profiles /
+  builds the cost model for ``--cluster``, runs the Cephalo planner, then
+  trains with truly uneven per-rank batches and state shards.
+
+Example (CPU, small model)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --reduced --steps 20 --batch 16 --seq 64 --runtime mpmd \
+        --cluster cluster-a
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import device_specs as D
+from repro.core.cost_model import analytic_cluster_model
+from repro.core.hetero_trainer import HeteroTrainer
+from repro.core.layered_ga import CephaloProgram
+from repro.core.model_stats import build_model_stats
+from repro.core.planner import auto_solve
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+CLUSTERS = {
+    "cluster-a": D.cluster_a,
+    "cluster-b": D.cluster_b,
+    "mini": lambda: D.Cluster([D.L4, D.A6000, D.P40, D.P100],
+                              link_gbps=50, name="mini"),
+}
+
+
+def run_mpmd(args) -> None:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cluster = CLUSTERS[args.cluster]()
+    stats = build_model_stats(cfg, args.seq)
+    cm = analytic_cluster_model(cluster, stats)
+    plan = auto_solve(cm, args.batch)
+    print(plan.summary())
+    if not plan.feasible:
+        raise SystemExit(f"infeasible: {plan.infeasible_reason}")
+    trainer = HeteroTrainer(cfg, plan, AdamConfig(lr=args.lr),
+                            seq_len=args.seq)
+    shards = trainer.init_shards(jax.random.PRNGKey(args.seed))
+    print(trainer.memory_report(shards))
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, args.seq,
+                                        seed=args.seed))
+    sim = trainer.simulated_iteration_seconds()
+    print(f"simulated iteration: {sim['iteration_s']*1e3:.1f} ms "
+          f"({sim['throughput_samples_s']:.2f} samples/s)")
+    t0 = time.time()
+    for step in range(args.steps):
+        big = stream.sample(step, plan.global_batch)
+        shards, loss = trainer.step(shards, big)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:>5} loss {loss:.4f} "
+                  f"({time.time() - t0:.1f}s wall)")
+    if args.checkpoint:
+        from repro.checkpoint import checkpointing as C
+        C.save(args.checkpoint, args.steps, shards,
+               {"plan": plan.to_json()})
+        print(f"saved checkpoint to {args.checkpoint}")
+
+
+def run_spmd(args) -> None:
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n = jax.device_count()
+    shape = {1: (1, 1)}.get(n) or (
+        (n // 2, 2) if n % 2 == 0 else (n, 1))
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    per_dev = max(args.batch // n, 1)
+    prog = CephaloProgram(cfg, mesh, ell=args.ell,
+                          m=max(per_dev // args.ell, 1), seq=args.seq,
+                          adam=AdamConfig(lr=args.lr),
+                          ga_mode=args.ga_mode)
+    state = prog.init_state(jax.random.PRNGKey(args.seed))
+    step_fn = prog.jit_step()
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, args.seq,
+                                        seed=args.seed))
+    geom_b = n * prog.ell * prog.m
+    t0 = time.time()
+    for step in range(args.steps):
+        big = stream.sample(step, geom_b)
+        toks = big[:, :-1].reshape(n, prog.ell, prog.m, args.seq)
+        labs = big[:, 1:].reshape(n, prog.ell, prog.m, args.seq)
+        w = np.full(toks.shape, 1.0 / (geom_b * args.seq), np.float32)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs),
+                 "weights": jnp.asarray(w)}
+        state, loss = step_fn(state, batch)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:>5} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s wall)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--runtime", choices=("spmd", "mpmd"), default="mpmd")
+    ap.add_argument("--cluster", default="mini", choices=list(CLUSTERS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ell", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ga-mode", default="layered",
+                    choices=("layered", "per_microbatch"))
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+    if args.runtime == "mpmd":
+        run_mpmd(args)
+    else:
+        run_spmd(args)
+
+
+if __name__ == "__main__":
+    main()

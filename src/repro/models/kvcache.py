@@ -1,0 +1,82 @@
+"""KV / SSM cache structures and (shard-aware) update helpers.
+
+Caches are plain pytrees (dicts of arrays) so they thread through jit /
+shard_map / scan without ceremony.  Windowed caches are ring buffers:
+``slot = position % cache_len``; a parallel ``pos`` array records which
+absolute position each slot currently holds (−1 = empty), which is all the
+attention mask needs — no separate validity bookkeeping.
+
+For sequence-sharded decode (DESIGN.md §5) each device holds a contiguous
+cache shard; :func:`write_kv` masks the write to the owning shard.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_kv(n_layers: int, batch: int, cache_len: int, n_kv: int,
+            head_dim: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((n_layers, batch, cache_len), -1, jnp.int32),
+    }
+
+
+def write_kv(k_cache: jax.Array, v_cache: jax.Array, pos_arr: jax.Array,
+             k_new: jax.Array, v_new: jax.Array, positions: jax.Array,
+             cache_total: int, shard_start: int = 0,
+             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Write one token's (k, v) into (a shard of) a layer cache.
+
+    k_cache/v_cache: (B, S_loc, KV, hd); pos_arr: (B, S_loc);
+    k_new/v_new: (B, 1, KV, hd); positions: (B,) absolute positions.
+    ``cache_total`` is the *global* cache length (= window for ring
+    buffers); ``shard_start`` → this device owns global slots
+    [shard_start, shard_start + S_loc).
+    """
+    b, s_loc = pos_arr.shape
+    slot_global = positions % cache_total
+    slot_local = slot_global - shard_start
+    valid = (slot_local >= 0) & (slot_local < s_loc)
+    idx = jnp.clip(slot_local, 0, s_loc - 1)
+    b_idx = jnp.arange(b)
+    k_upd = jnp.where(valid[:, None, None], k_new[:, 0],
+                      k_cache[b_idx, idx])
+    v_upd = jnp.where(valid[:, None, None], v_new[:, 0],
+                      v_cache[b_idx, idx])
+    p_upd = jnp.where(valid, positions, pos_arr[b_idx, idx])
+    k_cache = k_cache.at[b_idx, idx].set(k_upd)
+    v_cache = v_cache.at[b_idx, idx].set(v_upd)
+    pos_arr = pos_arr.at[b_idx, idx].set(p_upd)
+    return k_cache, v_cache, pos_arr
+
+
+def fill_kv_from_prefill(k: jax.Array, v: jax.Array, positions: jax.Array,
+                         cache_len: int, window: int = 0) -> dict:
+    """Build a single-layer cache dict from prefill-fresh (k, v).
+
+    k, v: (B, S, KV, hd) — the last ``cache_len`` positions are kept
+    (ring layout for windowed caches so decode can continue seamlessly).
+    """
+    b, s, n_kv, hd = k.shape
+    kc = jnp.zeros((b, cache_len, n_kv, hd), k.dtype)
+    vc = jnp.zeros((b, cache_len, n_kv, hd), v.dtype)
+    pc = jnp.full((b, cache_len), -1, jnp.int32)
+    take = min(s, cache_len)
+    src = slice(s - take, s)
+    if window > 0:
+        slots = positions[:, src] % cache_len
+        b_idx = jnp.arange(b)[:, None]
+        kc = kc.at[b_idx, slots].set(k[:, src])
+        vc = vc.at[b_idx, slots].set(v[:, src])
+        pc = pc.at[b_idx, slots].set(positions[:, src])
+    else:
+        kc = kc.at[:, :take].set(k[:, src])
+        vc = vc.at[:, :take].set(v[:, src])
+        pc = pc.at[:, :take].set(positions[:, src])
+    return {"k": kc, "v": vc, "pos": pc}

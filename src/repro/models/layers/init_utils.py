@@ -1,0 +1,23 @@
+"""Parameter initializers (fp32 master weights)."""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key: jax.Array, shape: Sequence[int],
+               fan_in: int | None = None) -> jax.Array:
+    """Truncated-normal with 1/sqrt(fan_in) scale (fan_in = shape[-2])."""
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32)

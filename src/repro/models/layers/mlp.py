@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU, GeGLU, and classic GELU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init_utils import dense_init
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff)),
+            "w_up": dense_init(k2, (d_model, d_ff)),
+            "w_down": dense_init(k3, (d_ff, d_model)),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(k1, (d_model, d_ff)),
+            "b_up": jnp.zeros((d_ff,), jnp.float32),
+            "w_down": dense_init(k2, (d_ff, d_model)),
+            "b_down": jnp.zeros((d_model,), jnp.float32),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    dtype = x.dtype
+    if kind in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(dtype)
+        up = x @ params["w_up"].astype(dtype)
+        act = jax.nn.silu(gate) if kind == "swiglu" \
+            else jax.nn.gelu(gate, approximate=True)
+        return (act * up) @ params["w_down"].astype(dtype)
+    h = x @ params["w_up"].astype(dtype) + params["b_up"].astype(dtype)
+    h = jax.nn.gelu(h, approximate=True)
+    return h @ params["w_down"].astype(dtype) + params["b_down"].astype(dtype)

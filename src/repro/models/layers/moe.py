@@ -1,0 +1,121 @@
+"""Mixture-of-Experts feed-forward with capacity-based token dispatch.
+
+GShard/Switch-style dispatch: top-k routing, per-expert capacity
+``C = ceil(T / E * k * capacity_factor)``, overflow tokens dropped (their
+residual passes through).  Dispatch/combine are einsums with a
+``(tokens, experts, capacity)`` one-hot — the layout that lowers to
+all-to-all under expert-parallel sharding on TPU.
+
+Router load-balance auxiliary loss per Switch Transformers:
+``aux = E * Σ_e f_e * P_e`` (fraction routed vs mean router prob).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.init_utils import dense_init
+
+
+def moe_init(key: jax.Array, d_model: int, d_ff: int, n_experts: int) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d_model, n_experts)),
+        "w_gate": dense_init(kg, (n_experts, d_model, d_ff), fan_in=d_model),
+        "w_up": dense_init(ku, (n_experts, d_model, d_ff), fan_in=d_model),
+        "w_down": dense_init(kd, (n_experts, d_ff, d_model), fan_in=d_ff),
+    }
+
+
+def _capacity(tokens: int, n_experts: int, k: int,
+              capacity_factor: float) -> int:
+    c = int(tokens * k * capacity_factor / n_experts) + 1
+    return max(min(c, tokens), 1)
+
+
+def moe_apply(params: dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25,
+              chunk_tokens: int = 4096,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y, aux_loss).
+
+    Long sequences are processed in *per-sequence* chunks of
+    ``chunk_tokens`` with chunk-local capacity:
+
+    * the dense ``(T, E, C)`` dispatch one-hot is O(T²/E) memory — at
+      32k-token prefill that is terabytes (measured on the dry-run,
+      EXPERIMENTS.md §Perf "moe-chunked-dispatch");
+    * chunking must preserve the (sharded) batch dim and keep the dispatch
+      cumsum *within one sequence*: flattening batch into chunks couples
+      the position computation across devices, and GSPMD responds by
+      all-gathering the full activation tensor (a measured 16 GiB
+      replicated f32 buffer — §Perf "moe-per-seq-dispatch").
+    """
+    b, s, d = x.shape
+    if s > chunk_tokens and s % chunk_tokens == 0:
+        nc = s // chunk_tokens
+        xc = x.reshape(b, nc, chunk_tokens, d).swapaxes(0, 1)
+
+        def body(_, xi):                       # xi: (B, chunk, d)
+            y, aux = jax.vmap(
+                lambda xb: _moe_dense(params, xb[None], top_k=top_k,
+                                      capacity_factor=capacity_factor)
+            )(xi)
+            return None, (y[:, 0], aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xc)   # ys: (nc, B, c, d)
+        return ys.swapaxes(0, 1).reshape(b, s, d), jnp.mean(auxs)
+    return _moe_dense(params, x, top_k=top_k,
+                      capacity_factor=capacity_factor)
+
+
+def _moe_dense(params: dict, x: jax.Array, *, top_k: int,
+               capacity_factor: float) -> Tuple[jax.Array, jax.Array]:
+    dtype = x.dtype
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (T, K)
+    # normalize the chosen gates (mixtral-style)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = _capacity(t, e, top_k, capacity_factor)
+    # position of each (token, k) assignment within its expert's queue
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)    # (T, K, E)
+    flat = onehot.reshape(t * top_k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, top_k, e)
+    pos = (pos_in_expert * onehot).sum(-1)                     # (T, K)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch (T, E, C) — boolean one-hot; combine carries the gate values
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=dtype)
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(dtype), pos_oh)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32),
+                      gate_vals).astype(dtype)
+
+    expert_in = jnp.einsum("tec,td->ecd", disp, xt)            # (E, C, D)
+    gate = jnp.einsum("ecd,edf->ecf", expert_in,
+                      params["w_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", expert_in,
+                    params["w_up"].astype(dtype))
+    act = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("ecf,efd->ecd", act,
+                            params["w_down"].astype(dtype))
+    y = jnp.einsum("tec,ecd->td", comb, expert_out).reshape(b, s, d)
+
+    # load-balance aux loss (computed on the top-1 routing fraction)
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_routed * mean_prob)
+    return y, aux

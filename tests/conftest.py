@@ -1,0 +1,37 @@
+"""Shared test helpers.
+
+NOTE: no XLA_FLAGS here — unit/smoke tests must see the real single CPU
+device.  Multi-device tests spawn subprocesses (tests/integration) that set
+``--xla_force_host_platform_device_count`` themselves.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess_devices(code: str, n_devices: int = 8,
+                           timeout: int = 900) -> str:
+    """Run ``code`` in a subprocess with N fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess_devices

@@ -1,0 +1,32 @@
+"""Model-level kernel integration: the Pallas kernels (interpret mode) must
+produce the same hidden states as the pure-jnp paths through the FULL
+model forward (REPRO_USE_PALLAS=interpret opt-in)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import model as M
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "gemma2-9b",
+                                  "mixtral-8x7b", "mamba2-370m"])
+def test_pallas_integration_matches_jnp(arch, monkeypatch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                              cfg.vocab_size)
+
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    h_ref, _ = M.forward_hidden(cfg, params, toks, remat="none")
+
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    h_kern, _ = M.forward_hidden(cfg, params, toks, remat="none")
+
+    err = float(jnp.abs(h_ref.astype(jnp.float32) -
+                        h_kern.astype(jnp.float32)).max())
+    scale = float(jnp.abs(h_ref).max())
+    assert err / scale < 2e-3, (arch, err, scale)

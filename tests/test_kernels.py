@@ -1,0 +1,99 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles, executed in interpret mode (CPU container; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_reference
+
+
+def _mk_qkv(b, h, kvh, sq, sk, d, dtype, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(kq, (b, h, sq, d), dtype),
+            jax.random.normal(kk, (b, kvh, sk, d), dtype),
+            jax.random.normal(kv, (b, kvh, sk, d), dtype))
+
+
+FLASH_CASES = [
+    # b, h, kvh, sq, sk, d, causal, window, softcap
+    (2, 4, 4, 128, 128, 64, True, 0, 0.0),
+    (2, 4, 2, 128, 128, 64, True, 0, 0.0),       # GQA
+    (1, 8, 1, 96, 96, 64, True, 0, 0.0),         # MQA, pad path
+    (2, 4, 4, 128, 128, 64, True, 48, 0.0),      # sliding window
+    (2, 4, 4, 128, 128, 64, True, 0, 30.0),      # softcap
+    (2, 4, 4, 64, 64, 64, False, 0, 0.0),        # non-causal (encoders)
+    (1, 2, 2, 64, 192, 32, True, 0, 0.0),        # cross lengths
+    (2, 4, 4, 128, 128, 128, True, 32, 50.0),    # everything at once
+]
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,sq,sk,d,causal,window,softcap", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(b, h, kvh, sq, sk, d, causal, window,
+                                softcap, dtype):
+    q, k, v = _mk_qkv(b, h, kvh, sq, sk, d, dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=32, block_kv=32,
+                          interpret=True)
+    ref = attention_reference(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    err = jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(err) < tol, f"err={float(err)}"
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the tiling."""
+    q, k, v = _mk_qkv(1, 4, 4, 128, 128, 64, jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_kv=bk,
+                            interpret=True)
+            for bq, bk in ((16, 16), (32, 64), (64, 32), (128, 128))]
+    for o in outs[1:]:
+        assert float(jnp.abs(o - outs[0]).max()) < 1e-5
+
+
+SSD_CASES = [
+    # b, h, l, p, n, chunk
+    (2, 4, 128, 32, 16, 32),
+    (1, 2, 96, 64, 32, 32),    # pad path
+    (2, 4, 256, 32, 64, 64),
+    (1, 8, 64, 64, 128, 16),   # mamba2-370m-like head geometry
+]
+
+
+@pytest.mark.parametrize("b,h,l,p,n,chunk", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_vs_ref(b, h, l, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (b, h, l, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, l), dtype))
+    a = -jnp.exp(jnp.linspace(0.0, 1.5, h))
+    bmat = jax.random.normal(ks[2], (b, l, n), dtype)
+    cmat = jax.random.normal(ks[3], (b, l, n), dtype)
+    out = ssd_scan(x, dt, a, bmat, cmat, chunk=chunk, interpret=True)
+    ref = ssd_reference(x, dt, a, bmat, cmat)
+    rel = float(jnp.abs(out.astype(jnp.float32) -
+                        ref.astype(jnp.float32)).max() /
+                jnp.abs(ref).max())
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert rel < tol, f"rel={rel}"
+
+
+def test_ssd_scan_chunk_independence():
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    b, h, l, p, n = 1, 2, 128, 32, 16
+    x = jax.random.normal(ks[0], (b, h, l, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, l)))
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    bmat = jax.random.normal(ks[2], (b, l, n))
+    cmat = jax.random.normal(ks[3], (b, l, n))
+    outs = [ssd_scan(x, dt, a, bmat, cmat, chunk=c, interpret=True)
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        # fp32 accumulation order differs across tilings
+        assert float(jnp.abs(o - outs[0]).max()) < 1e-3

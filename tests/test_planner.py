@@ -1,0 +1,159 @@
+"""Planner tests: DP invariants, paper-qualitative behaviour, and
+hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch
+from repro.core import device_specs as D
+from repro.core.cost_model import analytic_cluster_model
+from repro.core.model_stats import build_model_stats
+from repro.core.partition import even_shard_sizes
+from repro.core.planner import (auto_solve, plan_compute_only, plan_even,
+                                plan_memory_only, plan_whale, solve)
+
+
+def _cm(model="llama-3b", cluster=None, seq=512):
+    cluster = cluster or D.cluster_a()
+    stats = build_model_stats(get_arch(model), seq)
+    return analytic_cluster_model(cluster, stats)
+
+
+def test_solve_invariants_cluster_a():
+    cm = _cm()
+    plan = solve(cm, 128)
+    assert plan.feasible
+    plan.check()   # Σb=B, Σr=1, caps respected
+    assert plan.predicted_throughput > 0
+
+
+def test_cephalo_beats_ablations_llama3b():
+    """Fig. 7 qualitative: Cephalo ≥ CB ≥ MB; FSDP/Whale OOM on Llama-3B
+    (paper Table 8)."""
+    cm = _cm("llama-3b")
+    full = solve(cm, 128)
+    cb = plan_compute_only(cm, 128)
+    mb = plan_memory_only(cm, 128)
+    fsdp = plan_even(cm, 128)
+    whale = plan_whale(cm, 128)
+    assert full.feasible
+    assert not fsdp.feasible, "paper: FSDP OOMs on Llama-3B @128"
+    assert not whale.feasible, "paper: Whale OOMs on Llama-3B"
+    if cb.feasible:
+        assert full.predicted_throughput >= cb.predicted_throughput - 1e-9
+    assert mb.feasible
+    assert full.predicted_throughput > mb.predicted_throughput
+
+
+def test_fig9_qualitative_config_shape():
+    """Fig. 9: A6000 gets the largest batch and the largest state share;
+    P40 stores more state than P100 (same speed, 2x memory)."""
+    cm = _cm("llama-3b")
+    plan = solve(cm, 256)
+    assert plan.feasible
+    by_dev = {}
+    for r in plan.ranks:
+        by_dev.setdefault(r.device, []).append(r)
+    a6000 = by_dev["A6000"][0]
+    assert a6000.b == max(r.b for r in plan.ranks)
+    p40_state = np.mean([r.state_ratio for r in by_dev["P40"]])
+    p100_state = np.mean([r.state_ratio for r in by_dev["P100"]])
+    assert p40_state > p100_state
+    # memory utilization balanced: max/min utilization within 2x for
+    # ranks that hold state
+    utils = [r.mem_utilization for r in plan.ranks if r.state_bytes > 0]
+    assert max(utils) < 1.0
+
+
+def test_bigger_model_infeasible_on_whale_but_cephalo_ok():
+    cm = _cm("vit-e", seq=197)
+    plan = solve(cm, 128)
+    assert plan.feasible, plan.infeasible_reason
+    assert not plan_whale(cm, 128).feasible
+
+
+def test_scaled_solver_matches_batch():
+    cm = _cm("tiny-llama", cluster=D.cluster_b_subset(8, 8, 0))
+    plan = auto_solve(cm, 256)
+    assert plan.feasible
+    plan.check()
+
+
+def test_infeasible_when_cluster_too_small():
+    tiny = D.Cluster([D.P100], link_gbps=50, name="one-p100")
+    cm = _cm("gpt-6.7b", cluster=tiny)
+    plan = solve(cm, 8)
+    assert not plan.feasible   # 6.7B * 16B = 107 GB >> 12 GB
+
+
+# ---------------------------------------------------------------------------
+# Properties
+# ---------------------------------------------------------------------------
+
+@given(total=st.integers(1, 10_000_000),
+       n=st.integers(1, 64),
+       seed=st.integers(0, 1000))
+@settings(max_examples=200, deadline=None)
+def test_even_shard_sizes_properties(total, n, seed):
+    rng = np.random.default_rng(seed)
+    ratios = rng.random(n) + 1e-6
+    quantum = 128
+    total_q = ((total + n * quantum - 1) // (n * quantum)) * (n * quantum)
+    sizes = even_shard_sizes(total_q, ratios, quantum=quantum)
+    assert sum(sizes) == total_q
+    assert all(s >= 0 for s in sizes)
+    assert all(s % quantum == 0 for s in sizes)
+
+
+@given(batch=st.sampled_from([8, 16, 32, 64, 128]),
+       seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_plan_invariants_random_clusters(batch, seed):
+    rng = np.random.default_rng(seed)
+    pool = [D.P40, D.P100, D.A6000, D.L4, D.V100, D.T4, D.A10G]
+    devs = [pool[i] for i in rng.integers(0, len(pool), 4)]
+    cluster = D.Cluster(devs, link_gbps=50, name=f"rand{seed}")
+    cm = _cm("tiny-llama", cluster=cluster)
+    plan = solve(cm, batch)
+    if not plan.feasible:
+        return
+    plan.check()
+    # every rank's weights geometry is consistent
+    w = plan.example_weights()
+    assert w.shape == (plan.n, plan.ell_pad, plan.m_pad)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+    for i, r in enumerate(plan.ranks):
+        np.testing.assert_allclose(w[i].sum(), r.b / plan.global_batch,
+                                   rtol=1e-5)
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_plan_dominates_even_split(seed):
+    """Cephalo's plan is never worse than the even split (when even is
+    feasible) — the DP includes the even assignment in its search space."""
+    rng = np.random.default_rng(seed)
+    pool = [D.P40, D.P100, D.L4, D.A10G]
+    devs = [pool[i] for i in rng.integers(0, len(pool), 4)]
+    cm = _cm("bert-large", cluster=D.Cluster(devs, 50, f"r{seed}"))
+    even = plan_even(cm, 64, microbatch=16)
+    full = solve(cm, 64)
+    if even.feasible and full.feasible:
+        assert full.predicted_layer_s <= even.predicted_layer_s * 1.001
+
+
+def test_profiled_workflow_end_to_end():
+    """The paper's actual workflow: profile (real CPU timings) → fit →
+    plan.  The planner must accept measured models identically."""
+    from repro.core.profiler import profiled_cluster_model
+    cfg = get_arch("tiny-llama").reduced(n_layers=1, d_model=256)
+    cluster = D.Cluster([D.L4, D.A6000, D.P40, D.P100], 50, "mini")
+    cm = profiled_cluster_model(cluster, cfg, seq=64,
+                                ms=(1, 2, 4), repeats=1)
+    plan = solve(cm, 16)
+    assert plan.feasible
+    plan.check()
+    # speed ordering must survive profiling: A6000 >= P100 batch
+    by_dev = {r.device: r.b for r in plan.ranks}
+    assert by_dev["A6000"] >= by_dev["P100"]
