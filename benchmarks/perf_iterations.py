@@ -90,7 +90,7 @@ VARIANTS: Dict[str, Dict] = {
 def run_variant(vid: str) -> Dict:
     import jax
     from repro.configs.base import INPUT_SHAPES, get_arch
-    from repro.core.layered_ga import CephaloProgram
+    from repro.core.engine import CephaloProgram
     from repro.launch import serving
     from repro.launch.mesh import make_production_mesh
     from repro.roofline import analysis as R

@@ -25,7 +25,7 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(
 _SUBPROC = """
 import jax
 from repro.configs.base import get_arch
-from repro.core.layered_ga import CephaloProgram
+from repro.core.engine import CephaloProgram
 from repro.roofline.analysis import parse_collectives
 cfg = get_arch("stablelm-1.6b").reduced()
 mesh = jax.make_mesh((2, 4), ("data", "model"))

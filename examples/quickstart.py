@@ -15,7 +15,7 @@ import jax
 from repro.configs.base import get_arch
 from repro.core.cost_model import analytic_cluster_model
 from repro.core.device_specs import cluster_a
-from repro.core.hetero_trainer import HeteroTrainer
+from repro.core.engine import build_train_step
 from repro.core.model_stats import build_model_stats
 from repro.core.planner import solve
 from repro.data.pipeline import DataConfig, SyntheticStream
@@ -39,19 +39,21 @@ def main() -> None:
     print("\n--- plan ---")
     print(plan.summary())
 
-    # 4. heterogeneous MPMD training
-    trainer = HeteroTrainer(cfg, plan, AdamConfig(lr=2e-3), seq_len=SEQ)
-    shards = trainer.init_shards(jax.random.PRNGKey(0))
+    # 4. heterogeneous MPMD training through the unified engine API
+    engine = build_train_step(cfg, plan, schedule="layered",
+                              substrate="loopback",
+                              adam=AdamConfig(lr=2e-3), seq_len=SEQ)
+    state = engine.init_state(jax.random.PRNGKey(0))
     print("\n--- per-rank state memory (∝ r_i) ---")
-    print(trainer.memory_report(shards))
+    print(engine.memory_report(state))
 
     stream = SyntheticStream(DataConfig(cfg.vocab_size, SEQ, seed=0))
     print("\n--- training ---")
     for step in range(STEPS):
-        shards, loss = trainer.step(shards, stream.sample(step, BATCH))
+        state, loss = engine.step(state, stream.sample(step, BATCH))
         print(f"step {step:>3}  loss {loss:.4f}")
 
-    sim = trainer.simulated_iteration_seconds()
+    sim = engine.simulated_iteration_seconds()
     print(f"\nsimulated iteration on Cluster A: "
           f"{sim['iteration_s'] * 1e3:.1f} ms  "
           f"→ {sim['throughput_samples_s']:.1f} samples/s")

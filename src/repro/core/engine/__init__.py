@@ -1,0 +1,61 @@
+"""Unified execution-engine layer shared by the SPMD and MPMD runtimes.
+
+Cephalo's core idea is *decoupling*: compute distribution (who runs which
+microbatches) is assigned independently from training-state distribution
+(who stores which shard).  Both Cephalo runtimes in this repo implement
+that idea — ``repro.core.layered_ga`` as a ``shard_map`` SPMD program and
+``repro.core.hetero_trainer`` as a loopback MPMD process model — and both
+need exactly the same three ingredients.  This package is the single home
+for them (DESIGN.md §Engine):
+
+* :mod:`repro.core.engine.units` — **UnitPlanner**: the canonical
+  param→unit grouping, flat-buffer layout building, and grouped→params
+  reassembly.  One copy; both runtimes import it.
+* :mod:`repro.core.engine.schedules` — **Schedule**: the gradient-
+  accumulation schedule registry.  A schedule is a partition of the ℓ
+  microbatches into *collective rounds*; ``layered`` (paper Fig. 4
+  bottom), ``per_microbatch`` (FSDP-GA baseline, Fig. 4 top) and
+  ``interleaved`` (beyond-paper middle point) are registered, and new
+  schedules plug in without touching runtime code.
+* :mod:`repro.core.engine.substrate` — **CollectiveSubstrate**: how
+  AllGather / ReduceScatter are actually performed — in-graph ``lax``
+  collectives under ``shard_map`` vs. host loopback gather/scatter for
+  the MPMD process model.  A future multi-process (or pipeline) substrate
+  implements the same surface and slots in without touching schedules.
+* :mod:`repro.core.engine.api` — ``build_train_step(cfg, plan,
+  schedule=..., substrate=...)``: one entry point that returns a uniform
+  ``TrainEngine`` (init_state / step / gather_params) on either
+  substrate, for any registered schedule.
+"""
+
+from repro.core.engine.api import (MpmdEngine, SpmdEngine, TrainEngine,
+                                   build_train_step, homogeneous_plan)
+from repro.core.engine.schedules import (Schedule, chunked, get_schedule,
+                                         list_schedules, register_schedule)
+from repro.core.engine.substrate import (CollectiveSubstrate,
+                                         LoopbackSubstrate,
+                                         ShardMapSubstrate)
+from repro.core.engine.units import (UnitGroup, UnitPlanner, element_tree,
+                                     merge_params, split_params)
+
+__all__ = [
+    "CollectiveSubstrate", "LoopbackSubstrate", "MpmdEngine", "Schedule",
+    "ShardMapSubstrate", "SpmdEngine", "TrainEngine", "UnitGroup",
+    "UnitPlanner", "build_train_step", "chunked", "element_tree",
+    "get_schedule", "homogeneous_plan", "list_schedules", "merge_params",
+    "register_schedule", "split_params",
+    # lazy re-exports (PEP 562): "CephaloProgram", "HeteroTrainer"
+]
+
+
+def __getattr__(name):
+    # The runtimes consume this package, so re-export them lazily to keep
+    # `from repro.core.engine import CephaloProgram` working for
+    # launchers/benchmarks without a circular import.
+    if name == "CephaloProgram":
+        from repro.core.layered_ga import CephaloProgram
+        return CephaloProgram
+    if name == "HeteroTrainer":
+        from repro.core.hetero_trainer import HeteroTrainer
+        return HeteroTrainer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

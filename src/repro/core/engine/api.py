@@ -1,0 +1,169 @@
+"""``build_train_step`` — one entry point over both Cephalo runtimes.
+
+The engine exposes a uniform training surface for a ``(cfg, plan)`` pair::
+
+    engine = build_train_step(cfg, plan, schedule="layered",
+                              substrate="loopback")
+    state = engine.init_state(jax.random.PRNGKey(0))
+    state, loss = engine.step(state, big)      # big: (B, seq+1) tokens
+    params = engine.gather_params(state)
+
+Both substrates consume the same plan, the same data block, the same
+UnitPlanner layouts, and any registered Schedule; the gradient math is
+identical (Eq. 1), which `tests/test_engine.py` asserts numerically.
+
+* ``substrate="shard_map"`` — the SPMD runtime: one ``shard_map`` program
+  over ``plan.n`` devices, padded ``(ell_pad, m_pad)`` grids with Eq. 1
+  zero-weight padding.  Requires ``jax.device_count() >= plan.n`` (or an
+  explicit ``mesh``).
+* ``substrate="loopback"`` — the MPMD runtime: per-rank programs with
+  unpadded ``(ell_i, m_i)`` shapes and software loopback collectives;
+  runs on a single device.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.engine.schedules import Schedule, get_schedule
+from repro.core.partition import Plan, RankPlan
+from repro.optim.adam import AdamConfig
+
+SUBSTRATES = ("shard_map", "loopback")
+
+
+def homogeneous_plan(n: int, ell: int, m: int,
+                     device: str = "dev") -> Plan:
+    """Even plan for n identical ranks (the SPMD launcher's geometry)."""
+    ranks = [RankPlan(i, device, m=m, ell=ell, state_ratio=1.0 / n)
+             for i in range(n)]
+    return Plan(model="homogeneous", cluster=f"{n}x{device}",
+                global_batch=n * ell * m, ranks=ranks)
+
+
+class TrainEngine(abc.ABC):
+    """Uniform train-step surface over a (cfg, plan, schedule, substrate)."""
+
+    cfg: ArchConfig
+    plan: Plan
+    schedule: Schedule
+
+    @abc.abstractmethod
+    def init_state(self, key: jax.Array) -> Any:
+        """Materialize sharded training state from a PRNG key."""
+
+    @abc.abstractmethod
+    def step(self, state: Any, big: np.ndarray) -> Tuple[Any, float]:
+        """One optimizer step over a (B, seq+1) token block."""
+
+    @abc.abstractmethod
+    def gather_params(self, state: Any) -> Dict[str, Any]:
+        """Host-side: reassemble the full model param pytree."""
+
+
+class SpmdEngine(TrainEngine):
+    """shard_map substrate: the plan's padded grid on plan.n devices."""
+
+    def __init__(self, cfg: ArchConfig, plan: Plan, schedule: Schedule,
+                 adam: AdamConfig, seq_len: int, mesh=None, **knobs):
+        from repro.core.engine.units import normalized_ratios
+        from repro.core.layered_ga import CephaloProgram
+        assert plan.feasible, plan.infeasible_reason
+        self.cfg, self.plan, self.schedule = cfg, plan, schedule
+        self.seq = seq_len
+        if mesh is None:
+            if jax.device_count() < plan.n:
+                raise ValueError(
+                    f"shard_map substrate needs >= {plan.n} devices, "
+                    f"have {jax.device_count()} (set "
+                    f"--xla_force_host_platform_device_count or pass mesh)")
+            mesh = jax.make_mesh((plan.n,), ("data",),
+                                 devices=jax.devices()[: plan.n])
+        self.mesh = mesh
+        ratios = normalized_ratios(plan.state_ratios())
+        self.program = CephaloProgram(
+            cfg, mesh, ratios=list(ratios), ell=max(plan.ell_pad, 1),
+            m=max(plan.m_pad, 1), seq=seq_len, schedule=schedule,
+            adam=adam, **knobs)
+        self._jitted = None
+
+    def init_state(self, key: jax.Array) -> Dict[str, jax.Array]:
+        return self.program.init_state(key)
+
+    def step(self, state, big: np.ndarray):
+        from repro.data.pipeline import plan_grid_from_block
+        import jax.numpy as jnp
+        if self._jitted is None:
+            self._jitted = self.program.jit_step()
+        grid = plan_grid_from_block(self.plan, np.asarray(big))
+        batch = {k: jnp.asarray(v) for k, v in grid.items()}
+        new_state, loss = self._jitted(state, batch)
+        return new_state, float(loss)
+
+    def gather_params(self, state) -> Dict[str, Any]:
+        return self.program.gather_params(state)
+
+
+class MpmdEngine(TrainEngine):
+    """Loopback substrate: per-rank unpadded programs on one process."""
+
+    def __init__(self, cfg: ArchConfig, plan: Plan, schedule: Schedule,
+                 adam: AdamConfig, seq_len: int, **knobs):
+        from repro.core.hetero_trainer import HeteroTrainer
+        self.cfg, self.plan, self.schedule = cfg, plan, schedule
+        self.seq = seq_len
+        self.trainer = HeteroTrainer(cfg, plan, adam=adam,
+                                     seq_len=seq_len, schedule=schedule)
+
+    def init_state(self, key: jax.Array):
+        return self.trainer.init_shards(key)
+
+    def step(self, state, big: np.ndarray):
+        return self.trainer.step(state, np.asarray(big))
+
+    def gather_params(self, state) -> Dict[str, Any]:
+        return self.trainer.software_allgather(state)
+
+    # MPMD extras surfaced for the launcher
+    def memory_report(self, state) -> str:
+        return self.trainer.memory_report(state)
+
+    def simulated_iteration_seconds(self) -> Dict[str, float]:
+        return self.trainer.simulated_iteration_seconds()
+
+
+def build_train_step(cfg: ArchConfig, plan: Plan, *,
+                     schedule: Union[str, Schedule] = "layered",
+                     substrate: str = "auto",
+                     adam: AdamConfig = AdamConfig(),
+                     seq_len: int = 512,
+                     mesh=None,
+                     **knobs) -> TrainEngine:
+    """Build a train engine for ``(cfg, plan)`` on the chosen substrate.
+
+    ``schedule`` — any name in :func:`repro.core.engine.list_schedules`
+    (or a :class:`Schedule` instance).  ``substrate`` — ``"shard_map"``,
+    ``"loopback"``, or ``"auto"`` (shard_map iff enough devices exist for
+    the plan).  Extra ``knobs`` (``gather_dtype``, ``remat``, ``unroll``,
+    ``state_axes``, ...) are forwarded to the SPMD program.
+    """
+    sched = get_schedule(schedule)
+    if substrate == "auto":
+        substrate = "shard_map" if (mesh is not None or
+                                    jax.device_count() >= plan.n > 1) \
+            else "loopback"
+    if substrate == "shard_map":
+        return SpmdEngine(cfg, plan, sched, adam, seq_len, mesh=mesh,
+                          **knobs)
+    if substrate == "loopback":
+        if knobs:
+            raise ValueError(
+                f"loopback substrate takes no extra knobs, got {knobs}")
+        return MpmdEngine(cfg, plan, sched, adam, seq_len)
+    raise ValueError(f"unknown substrate {substrate!r}; "
+                     f"choose from {SUBSTRATES}")

@@ -1,0 +1,186 @@
+"""CollectiveSubstrate — how gather/scatter are actually performed.
+
+Schedules (``repro.core.engine.schedules``) decide *when* the per-unit
+collectives happen; substrates decide *how*:
+
+* :class:`ShardMapSubstrate` — in-graph ``lax`` collectives inside a
+  ``jax.shard_map`` SPMD program.  Forward AllGather and backward
+  ReduceScatter are fused into one differentiable gather
+  (``fsdp.make_mixed_gather`` custom_vjp) with independent forward /
+  backward precision, plus the HSDP replica all-reduce.
+* :class:`LoopbackSubstrate` — host-side software collectives for the
+  MPMD process model: full-pytree reassembly from per-rank ragged shards
+  (AllGatherv semantics, zero padding overhead) and full-grad →
+  per-rank-slice scatter.  On a real fleet each rank is one JAX process
+  and these calls become NCCL/gloo collectives; the surface stays the
+  same, which is the seam a future multi-process substrate implements.
+
+The loopback substrate counts collective *events* (``stats``) so tests
+can assert a schedule's round structure without parsing HLO.  The
+shard_map substrate's collectives live inside a traced program, where
+Python-side counters would reflect tracing (once per jit cache entry,
+re-traces under remat), not execution — assert its collective structure
+on compiled HLO instead (``repro.roofline.analysis.parse_collectives``).
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fsdp
+from repro.core.engine.units import UnitGroup, UnitPlanner
+
+
+def shard_map_call(fn, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` entry (the substrate owns the SPMD
+    binding): jax >= 0.6 exposes ``jax.shard_map(check_vma=...)``, older
+    releases ``jax.experimental.shard_map.shard_map(check_rep=...)``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+class CollectiveSubstrate(abc.ABC):
+    """Common surface of the per-unit gather/scatter machinery."""
+
+    name: str = "abstract"
+
+    def __init__(self) -> None:
+        self.stats: Dict[str, int] = {"all_gather": 0, "reduce_scatter": 0}
+
+    def reset_stats(self) -> None:
+        for k in self.stats:
+            self.stats[k] = 0
+
+
+class ShardMapSubstrate(CollectiveSubstrate):
+    """In-graph lax collectives for the shard_map SPMD runtime.
+
+    ``state_axes`` — mesh axes the state is sharded over (ZeRO-3 over all
+    axes by default); ``replica_axes`` — HSDP replication axes whose
+    gradient all-reduce rides on the gather's backward pass.
+    """
+
+    name = "shard_map"
+
+    def __init__(self, state_axes: Sequence[str],
+                 replica_axes: Sequence[str] = (),
+                 gather_dtype=jnp.float32, grad_dtype=jnp.float32):
+        super().__init__()
+        self.state_axes = tuple(state_axes)
+        self.replica_axes = tuple(replica_axes)
+        self.gather_dtype = gather_dtype
+        self.grad_dtype = grad_dtype
+
+    def unit_gather_fn(self, group: UnitGroup) -> Callable[[jax.Array], Any]:
+        """(P_max,) local shard → full param tree for one unit.
+
+        Differentiable: the VJP is one ReduceScatter of the cotangent (plus
+        the HSDP replica psum) — the schedule's per-round collective pair.
+        """
+        fn = fsdp.make_mixed_gather(group.layout, self.state_axes,
+                                    self.gather_dtype, self.grad_dtype,
+                                    replica_axes=self.replica_axes)
+
+        def gather(shard: jax.Array) -> Any:
+            full = fn(shard)
+            return fsdp.unflatten_unit(group.layout, full,
+                                       dtype=self.gather_dtype)
+
+        return gather
+
+
+class LoopbackSubstrate(CollectiveSubstrate):
+    """Host-side software collectives for the MPMD loopback runtime.
+
+    State lives as per-rank *ragged* shards (physical memory ∝ r_i — the
+    paper's memory-balancing claim); gather reassembles the full pytree,
+    scatter slices a full gradient pytree back into rank shards.
+    """
+
+    name = "loopback"
+
+    def __init__(self, planner: UnitPlanner):
+        super().__init__()
+        self.planner = planner
+        self.n = planner.n
+
+    # --- state layout -------------------------------------------------------
+    def shard_state(self, params: Dict[str, Any]
+                    ) -> List[Dict[str, Dict[str, np.ndarray]]]:
+        """Full params → per-rank {unit: {"p","m","v"}} ragged shards."""
+        grouped = self.planner.split(params)
+        shards: List[Dict[str, Any]] = [dict() for _ in range(self.n)]
+        for g in self.planner.groups:
+            for r, p in enumerate(self._shard_group(g, grouped[g.name])):
+                shards[r][g.name] = {"p": p, "m": np.zeros_like(p),
+                                     "v": np.zeros_like(p)}
+        return shards
+
+    def _shard_group(self, g: UnitGroup, tree: Any) -> List[np.ndarray]:
+        """One unit group's tree → per-rank ragged buffers (stacked for
+        count>1 stage units)."""
+        if g.count > 1:
+            per_rank: List[List[np.ndarray]] = [[] for _ in range(self.n)]
+            for i in range(g.count):
+                flat = fsdp.flatten_unit(
+                    g.layout, jax.tree.map(lambda a, i=i: a[i], tree))
+                for r, s in enumerate(
+                        fsdp.shard_unit_ragged(g.layout, flat)):
+                    per_rank[r].append(s)
+            return [np.stack(p) for p in per_rank]
+        flat = fsdp.flatten_unit(g.layout, tree)
+        return fsdp.shard_unit_ragged(g.layout, flat)
+
+    # --- collectives --------------------------------------------------------
+    def allgather_params(self, shards: List[Dict[str, Any]],
+                         key: str = "p") -> Dict[str, Any]:
+        """Reassemble the full params pytree from all ranks' shards."""
+        self.stats["all_gather"] += 1
+        grouped: Dict[str, Any] = {}
+        for g in self.planner.groups:
+            if g.count > 1:
+                elems = []
+                for i in range(g.count):
+                    flat = np.concatenate(
+                        [shards[r][g.name][key][i, : g.layout.shard_sizes[r]]
+                         for r in range(self.n)])
+                    elems.append(fsdp.unflatten_unit(
+                        g.layout, jnp.asarray(flat)))
+                grouped[g.name] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *elems)
+            else:
+                flat = np.concatenate(
+                    [shards[r][g.name][key][: g.layout.shard_sizes[r]]
+                     for r in range(self.n)])
+                grouped[g.name] = fsdp.unflatten_unit(
+                    g.layout, jnp.asarray(flat))
+        return self.planner.merge(grouped)
+
+    def reduce_scatter_grads(self, grads_full: Any
+                             ) -> List[Dict[str, np.ndarray]]:
+        """Full-grad pytree → per-rank shard slices (already summed).
+        Uses the same ragged layout path as :meth:`shard_state`, so the
+        gradient scatter can never desynchronize from the state layout."""
+        self.stats["reduce_scatter"] += 1
+        grouped = self.planner.split(grads_full)
+        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
+        for g in self.planner.groups:
+            for r, s in enumerate(self._shard_group(g, grouped[g.name])):
+                out[r][g.name] = s
+        return out
+
+    def accumulate_grad_shards(self, acc, new):
+        """Shard-space gradient accumulation across collective rounds."""
+        if acc is None:
+            return new
+        return [{name: acc[r][name] + new[r][name] for name in new[r]}
+                for r in range(self.n)]

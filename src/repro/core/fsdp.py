@@ -14,6 +14,13 @@ The gather/scatter pair is differentiable: ``all_gather``'s transpose is
 exactly one ReduceScatter per unit per backward pass (the paper's Fig. 4
 schedule falls out of the loop structure + remat policy in
 :mod:`repro.core.layered_ga`).
+
+This module is the engine's *primitive* layer: unit grouping and layout
+construction live in :mod:`repro.core.engine.units` (UnitPlanner), and
+the substrates (:mod:`repro.core.engine.substrate`) bind these flat
+layouts to either in-graph lax collectives (shard_map) or host loopback
+gather/scatter (MPMD).  Nothing above the engine should call the
+collective helpers here directly.
 """
 
 from __future__ import annotations

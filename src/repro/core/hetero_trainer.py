@@ -5,16 +5,25 @@ with its *own* batch size; only the collectives synchronize.  Cephalo's
 compute balancing (uneven ``b_i``) depends on that — a lock-step SPMD
 program cannot give a fast device more work per step (DESIGN.md §2).
 
-This runtime reproduces the MPMD model in JAX:
+This runtime reproduces the MPMD model in JAX on top of the shared
+execution engine (:mod:`repro.core.engine`, DESIGN.md §Engine):
 
-* every rank owns a *state shard* sized by the planner's ratio ``r_i``
-  (same flat-unit layouts as the SPMD path, ``repro.core.fsdp``);
+* every rank owns a *state shard* sized by the planner's ratio ``r_i`` —
+  the unit grouping and flat layouts come from the engine's
+  :class:`~repro.core.engine.units.UnitPlanner` (the same one the SPMD
+  runtime uses);
 * every rank has its own jit-compiled program with static, *unpadded*
   ``(ell_i, m_i)`` batch shapes — heterogeneous ranks really do compile
   different programs, exactly like the paper's per-GPU processes;
-* AllGather / ReduceScatter are software loopback collectives (this
-  container has one device); on a real fleet each rank would be one JAX
-  process and the loopback calls become gloo/ICI collectives;
+* AllGather / ReduceScatter are the engine's
+  :class:`~repro.core.engine.substrate.LoopbackSubstrate` software
+  collectives (this container has one device); on a real fleet each rank
+  would be one JAX process and the loopback calls become gloo/ICI
+  collectives;
+* the gradient-accumulation :class:`~repro.core.engine.schedules.Schedule`
+  partitions each step into collective rounds exactly as on the SPMD
+  substrate — ``layered`` gathers once per step, ``per_microbatch`` once
+  per microbatch index;
 * wall-clock is *simulated* from the planner's cost model (no hetero
   hardware here); gradient math is exact and tested against homogeneous
   single-device training (Eq. 1 equivalence).
@@ -22,157 +31,61 @@ This runtime reproduces the MPMD model in JAX:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import fsdp
+from repro.core.engine.schedules import Schedule, get_schedule
+from repro.core.engine.substrate import LoopbackSubstrate
+from repro.core.engine.units import UnitGroup, UnitPlanner, normalized_ratios
 from repro.core.partition import Plan
 from repro.models import model as M
 from repro.optim.adam import AdamConfig, adam_update
-
-
-@dataclasses.dataclass
-class UnitGroupH:
-    name: str
-    layout: fsdp.UnitLayout
-    count: int = 1
-
-
-def _split_params(cfg: ArchConfig, params: Dict[str, Any]) -> Dict[str, Any]:
-    from repro.core.layered_ga import _split_params as sp
-    return sp(cfg, params)
 
 
 class HeteroTrainer:
     """Loopback MPMD Cephalo runtime for one (cfg, plan) pair."""
 
     def __init__(self, cfg: ArchConfig, plan: Plan,
-                 adam: AdamConfig = AdamConfig(), seq_len: int = 512):
+                 adam: AdamConfig = AdamConfig(), seq_len: int = 512,
+                 schedule: Union[str, Schedule] = "layered"):
         assert plan.feasible, plan.infeasible_reason
         self.cfg = cfg
         self.plan = plan
         self.adam = adam
         self.seq = seq_len
         self.n = plan.n
-        ratios = plan.state_ratios()
+        self.schedule = get_schedule(schedule)
         # guard against all-zero ratio degeneracies in tiny tests
-        if ratios.sum() <= 0:
-            ratios = np.ones(self.n) / self.n
-        self.ratios = ratios
-        self.stages = M.build_stages(cfg)
-        shapes = jax.eval_shape(
-            lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
-        grouped = _split_params(cfg, shapes)
-        from repro.core.layered_ga import _element_tree
-        self.groups: List[UnitGroupH] = []
-        for name, tree in grouped.items():
-            if name.startswith("stage"):
-                idx = int(name[len("stage"):])
-                elem = _element_tree(tree)
-                self.groups.append(UnitGroupH(
-                    name, fsdp.make_layout(name, elem, self.ratios),
-                    count=self.stages[idx].count))
-            else:
-                self.groups.append(UnitGroupH(
-                    name, fsdp.make_layout(name, tree, self.ratios)))
+        self.ratios = normalized_ratios(plan.state_ratios())
+        self.planner = UnitPlanner(cfg, self.ratios)
+        self.stages = self.planner.stages
+        self.groups: List[UnitGroup] = self.planner.groups
+        self.substrate = LoopbackSubstrate(self.planner)
         self._rank_grad_fns: List[Optional[Callable]] = [None] * self.n
 
     # --- state ------------------------------------------------------------
-    def init_shards(self, key: jax.Array) -> List[Dict[str, np.ndarray]]:
+    def init_shards(self, key: jax.Array) -> List[Dict[str, Any]]:
         """Per-rank state shards {unit: {"p","m","v"}} (host arrays)."""
         params = M.init_params(self.cfg, key)
-        grouped = _split_params(self.cfg, params)
-        shards: List[Dict[str, Any]] = [
-            {"step": 0} for _ in range(self.n)]
-        for g in self.groups:
-            tree = grouped[g.name]
-            if g.count > 1:
-                flats = [fsdp.flatten_unit(
-                    g.layout, jax.tree.map(lambda a, i=i: a[i], tree))
-                    for i in range(g.count)]
-                per_rank = [[] for _ in range(self.n)]
-                for f in flats:
-                    for r, s in enumerate(fsdp.shard_unit_ragged(g.layout, f)):
-                        per_rank[r].append(s)
-                for r in range(self.n):
-                    p = np.stack(per_rank[r])
-                    shards[r][g.name] = {
-                        "p": p, "m": np.zeros_like(p),
-                        "v": np.zeros_like(p)}
-            else:
-                flat = fsdp.flatten_unit(g.layout, tree)
-                for r, s in enumerate(fsdp.shard_unit_ragged(g.layout, flat)):
-                    p = s
-                    shards[r][g.name] = {
-                        "p": p, "m": np.zeros_like(p),
-                        "v": np.zeros_like(p)}
+        shards = self.substrate.shard_state(params)
+        for s in shards:
+            s["step"] = 0
         return shards
 
     # --- software collectives (loopback) -----------------------------------
     def software_allgather(self, shards: List[Dict[str, Any]]
                            ) -> Dict[str, Any]:
         """Reassemble the full params pytree from all ranks' shards."""
-        grouped: Dict[str, Any] = {}
-        for g in self.groups:
-            if g.count > 1:
-                elems = []
-                for i in range(g.count):
-                    flat = np.concatenate(
-                        [shards[r][g.name]["p"][i, : g.layout.shard_sizes[r]]
-                         for r in range(self.n)])
-                    elems.append(fsdp.unflatten_unit(
-                        g.layout, jnp.asarray(flat)))
-                grouped[g.name] = jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *elems)
-            else:
-                flat = np.concatenate(
-                    [shards[r][g.name]["p"][: g.layout.shard_sizes[r]]
-                     for r in range(self.n)])
-                grouped[g.name] = fsdp.unflatten_unit(
-                    g.layout, jnp.asarray(flat))
-        params: Dict[str, Any] = {
-            "embed": grouped["embed"]["embed"],
-            "final_norm": grouped["misc"]["final_norm"],
-        }
-        for k in ("pos_embed", "frontend_proj"):
-            if k in grouped["misc"]:
-                params[k] = grouped["misc"][k]
-        if "head" in grouped:
-            params["head"] = grouped["head"]["head"]
-        if "shared" in grouped:
-            params["shared"] = grouped["shared"]
-        params["stages"] = [grouped[f"stage{i}"]
-                            for i in range(len(self.stages))]
-        return params
+        return self.substrate.allgather_params(shards)
 
     def software_reduce_scatter(self, grads_full: Any
                                 ) -> List[Dict[str, np.ndarray]]:
         """Full-grad pytree → per-rank shard slices (already summed)."""
-        grouped = _split_params(self.cfg, grads_full)
-        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
-        for g in self.groups:
-            tree = grouped[g.name]
-            if g.count > 1:
-                per_rank = [[] for _ in range(self.n)]
-                for i in range(g.count):
-                    flat = fsdp.flatten_unit(
-                        g.layout, jax.tree.map(lambda a, i=i: a[i], tree))
-                    for r, s in enumerate(
-                            fsdp.shard_unit_ragged(g.layout, flat)):
-                        per_rank[r].append(s)
-                for r in range(self.n):
-                    out[r][g.name] = np.stack(per_rank[r])
-            else:
-                flat = fsdp.flatten_unit(g.layout, tree)
-                for r, s in enumerate(
-                        fsdp.shard_unit_ragged(g.layout, flat)):
-                    out[r][g.name] = s
-        return out
+        return self.substrate.reduce_scatter_grads(grads_full)
 
     # --- per-rank programs --------------------------------------------------
     def _rank_grad_fn(self, rank: int) -> Optional[Callable]:
@@ -215,24 +128,59 @@ class HeteroTrainer:
         return out
 
     # --- the loopback step ---------------------------------------------------
-    def step(self, shards: List[Dict[str, Any]], big: np.ndarray
-             ) -> Tuple[List[Dict[str, Any]], float]:
-        """One training iteration.  ``big``: (B, seq+1) token block."""
-        full_params = self.software_allgather(shards)       # AG (loopback)
-        batches = self.rank_batches(big)
+    def _round_loss_and_grads(self, full_params, batches,
+                              mb_lo: int, mb_hi: int
+                              ) -> Tuple[float, Any]:
+        """Fwd+bwd for microbatch indices [mb_lo, mb_hi) on every rank.
+
+        Rank *i* contributes its microbatches with index < ell_i in the
+        range; each is m_i rows of its unpadded batch slice.
+        """
         total_loss = 0.0
         grads_sum = None
         for rank in range(self.n):
             fn = self._rank_grad_fn(rank)
             if fn is None:
                 continue
+            r = self.plan.ranks[rank]
+            lo, hi = min(mb_lo, r.ell), min(mb_hi, r.ell)
+            if hi <= lo:
+                continue
             b = batches[rank]
-            loss, grads = fn(full_params, b["tokens"], b["labels"],
-                             b["weights"])
+            rows = slice(lo * r.m, hi * r.m)
+            loss, grads = fn(full_params, b["tokens"][rows],
+                             b["labels"][rows], b["weights"][rows])
             total_loss += float(loss)
             grads_sum = grads if grads_sum is None else \
                 jax.tree.map(jnp.add, grads_sum, grads)
-        grad_shards = self.software_reduce_scatter(grads_sum)  # RS (loopback)
+        return total_loss, grads_sum
+
+    def step(self, shards: List[Dict[str, Any]], big: np.ndarray
+             ) -> Tuple[List[Dict[str, Any]], float]:
+        """One training iteration.  ``big``: (B, seq+1) token block.
+
+        The schedule's collective rounds are walked over the *padded*
+        microbatch index space (ℓ_pad = max_i ℓ_i): each round re-gathers
+        the full params (AG), runs its microbatch range on every rank, and
+        ReduceScatters the round's summed gradient into shard space, where
+        it accumulates.  ``layered`` ⇒ exactly one AG + one RS per step.
+        """
+        batches = self.rank_batches(big)
+        chunks = self.schedule.chunks(max(self.plan.ell_pad, 1))
+        total_loss = 0.0
+        grad_shards: Optional[List[Dict[str, np.ndarray]]] = None
+        mb_off = 0
+        for size in chunks:
+            full_params = self.software_allgather(shards)   # AG (loopback)
+            loss, grads_sum = self._round_loss_and_grads(
+                full_params, batches, mb_off, mb_off + size)
+            mb_off += size
+            if grads_sum is None:
+                continue        # every rank exhausted its ℓ_i already
+            total_loss += loss
+            round_shards = self.software_reduce_scatter(grads_sum)  # RS
+            grad_shards = self.substrate.accumulate_grad_shards(
+                grad_shards, round_shards)
         # local Adam on each rank's shard (ZeRO-3: fully local)
         new_shards: List[Dict[str, Any]] = []
         for r in range(self.n):

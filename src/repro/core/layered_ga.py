@@ -2,17 +2,24 @@
 
 Builds a ``jax.jit``-able train step that runs inside ``shard_map`` over
 the *flattened* data-parallel axis (every chip is a ZeRO-3 worker; the
-``model`` mesh axis shards state only — paper Sec. 2).  Two schedules:
+``model`` mesh axis shards state only — paper Sec. 2).  The unit
+grouping, GA schedule, and collective machinery all come from the shared
+execution engine (:mod:`repro.core.engine`, DESIGN.md §Engine):
 
-* ``ga_mode="layered"`` (Cephalo, paper Fig. 4 bottom): one AllGather per
-  unit per forward, one re-gather + one ReduceScatter per unit per
-  backward — all microbatches of a unit run between collectives.  The
-  schedule falls out of the loop structure (unit loop outer, microbatch
-  scan inner) plus full rematerialization (the bwd re-gathers instead of
-  saving gathered params).
-* ``ga_mode="per_microbatch"`` (FSDP-GA baseline, Fig. 4 top): an outer
-  scan over microbatches accumulates gradients; every microbatch pays the
-  full per-unit collective bill — ℓ× the AllGather/ReduceScatter traffic.
+* **UnitPlanner** supplies the canonical param→unit grouping and flat
+  shard layouts (one copy, shared with the MPMD runtime).
+* **Schedule** partitions the ℓ microbatches into collective rounds:
+  ``layered`` (Cephalo, paper Fig. 4 bottom — one AllGather per unit per
+  forward, one re-gather + one ReduceScatter per unit per backward, all
+  microbatches between collectives), ``per_microbatch`` (FSDP-GA
+  baseline, Fig. 4 top — every microbatch pays the full per-unit
+  collective bill), ``interleaved``, or any registered schedule.  The
+  layered schedule falls out of the loop structure (unit loop outer,
+  microbatch scan inner) plus full rematerialization (the bwd re-gathers
+  instead of saving gathered params).
+* **ShardMapSubstrate** provides the differentiable mixed-precision
+  gather whose VJP is the per-unit ReduceScatter (plus the HSDP replica
+  all-reduce).
 
 Per-device batch layout is the plan's padded grid ``(ell, m, seq)`` with
 Eq. 1 weights zeroing the padding (repro.data.pipeline).
@@ -26,10 +33,7 @@ exact for the roofline parser).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,48 +42,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import fsdp
+from repro.core.engine.schedules import Schedule, get_schedule
+from repro.core.engine.substrate import ShardMapSubstrate
+from repro.core.engine.units import (UnitGroup, UnitPlanner, merge_params,
+                                     split_params)
 from repro.models import model as M
 from repro.optim.adam import AdamConfig, adam_update
-
-
-# ---------------------------------------------------------------------------
-# Unit grouping
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class UnitGroup:
-    """One FSDP unit family: 'embed' / 'head' / 'misc' / 'shared' /
-    'stage<i>' (the latter stacked over the stage's element count)."""
-
-    name: str
-    layout: fsdp.UnitLayout
-    count: int = 1               # >1 → stacked stage unit
-    stage_idx: int = -1          # index into build_stages(cfg)
-
-
-def _split_params(cfg: ArchConfig, params: Dict[str, Any]
-                  ) -> Dict[str, Any]:
-    """Regroup model params into unit trees."""
-    groups: Dict[str, Any] = {"embed": {"embed": params["embed"]}}
-    if "head" in params:
-        groups["head"] = {"head": params["head"]}
-    misc = {"final_norm": params["final_norm"]}
-    for k in ("pos_embed", "frontend_proj"):
-        if k in params:
-            misc[k] = params[k]
-    groups["misc"] = misc
-    if "shared" in params:
-        groups["shared"] = params["shared"]
-    for i, sp in enumerate(params["stages"]):
-        groups[f"stage{i}"] = sp
-    return groups
-
-
-def _element_tree(stacked: Any) -> Any:
-    """First element of a stacked stage tree (shapes without leading dim)."""
-    return jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
-        if isinstance(a, jax.ShapeDtypeStruct) else a[0], stacked)
 
 
 class CephaloProgram:
@@ -88,7 +56,7 @@ class CephaloProgram:
     def __init__(self, cfg: ArchConfig, mesh: Mesh,
                  ratios: Optional[Sequence[float]] = None,
                  ell: int = 1, m: int = 1, seq: int = 512,
-                 ga_mode: str = "layered",
+                 ga_mode: Union[str, Schedule] = "layered",
                  gather_dtype: str = "float32",
                  grad_dtype: str = "float32",
                  remat: str = "full",
@@ -96,7 +64,8 @@ class CephaloProgram:
                  adam: AdamConfig = AdamConfig(),
                  ce_chunk: int = 512,
                  has_frontend_batch: bool = False,
-                 state_axes: Optional[Sequence[str]] = None):
+                 state_axes: Optional[Sequence[str]] = None,
+                 schedule: Union[str, Schedule, None] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.axes = tuple(mesh.axis_names)
@@ -115,7 +84,10 @@ class CephaloProgram:
             else [1.0 / self.n_state] * self.n_state
         assert len(self.ratios) == self.n_state
         self.ell, self.m, self.seq = ell, m, seq
-        self.ga_mode = ga_mode
+        # ``schedule`` (engine API) wins over the legacy ``ga_mode`` alias.
+        self.schedule = get_schedule(schedule if schedule is not None
+                                     else ga_mode)
+        self.ga_mode = self.schedule.name
         self.gather_dtype = jnp.bfloat16 if gather_dtype == "bfloat16" \
             else jnp.float32
         self.grad_dtype = jnp.bfloat16 if grad_dtype == "bfloat16" \
@@ -125,36 +97,19 @@ class CephaloProgram:
         self.adam = adam
         self.ce_chunk = ce_chunk
         self.has_frontend = bool(cfg.frontend_dim) and has_frontend_batch
-        self.stages = M.build_stages(cfg)
-        self.groups = self._build_groups()
+        self.planner = UnitPlanner(cfg, self.ratios)
+        self.stages = self.planner.stages
+        self.groups = self.planner.groups
+        self.substrate = ShardMapSubstrate(
+            self.state_axes, replica_axes=self.replica_axes,
+            gather_dtype=self.gather_dtype, grad_dtype=self.grad_dtype)
 
     # --- layouts ----------------------------------------------------------
-    def _build_groups(self) -> List[UnitGroup]:
-        key = jax.random.PRNGKey(0)
-        shapes = jax.eval_shape(lambda: M.init_params(self.cfg, key))
-        grouped = _split_params(self.cfg, shapes)
-        out: List[UnitGroup] = []
-        for name, tree in grouped.items():
-            if name.startswith("stage"):
-                idx = int(name[len("stage"):])
-                elem = _element_tree(tree)
-                layout = fsdp.make_layout(name, elem, self.ratios)
-                out.append(UnitGroup(name, layout,
-                                     count=self.stages[idx].count,
-                                     stage_idx=idx))
-            else:
-                layout = fsdp.make_layout(name, tree, self.ratios)
-                out.append(UnitGroup(name, layout))
-        return out
-
     def group(self, name: str) -> UnitGroup:
-        for g in self.groups:
-            if g.name == name:
-                return g
-        raise KeyError(name)
+        return self.planner.group(name)
 
     def has_group(self, name: str) -> bool:
-        return any(g.name == name for g in self.groups)
+        return self.planner.has_group(name)
 
     # --- state ------------------------------------------------------------
     def state_shapes(self) -> Dict[str, Any]:
@@ -198,7 +153,7 @@ class CephaloProgram:
     def init_state(self, key: jax.Array) -> Dict[str, jax.Array]:
         """Materialize real state (small models / examples only)."""
         params = M.init_params(self.cfg, key)
-        grouped = _split_params(self.cfg, params)
+        grouped = split_params(self.cfg, params)
         out: Dict[str, jax.Array] = {"step": jnp.int32(0)}
         for g in self.groups:
             tree = grouped[g.name]
@@ -238,20 +193,7 @@ class CephaloProgram:
             else:
                 flat = self._unshard_host(g.layout, buf)
                 grouped[g.name] = fsdp.unflatten_unit(g.layout, flat)
-        params: Dict[str, Any] = {
-            "embed": grouped["embed"]["embed"],
-            "final_norm": grouped["misc"]["final_norm"],
-        }
-        for k in ("pos_embed", "frontend_proj"):
-            if k in grouped["misc"]:
-                params[k] = grouped["misc"][k]
-        if "head" in grouped:
-            params["head"] = grouped["head"]["head"]
-        if "shared" in grouped:
-            params["shared"] = grouped["shared"]
-        params["stages"] = [grouped[f"stage{i}"]
-                            for i in range(len(self.stages))]
-        return params
+        return merge_params(grouped, len(self.stages))
 
     def _unshard_host(self, layout: fsdp.UnitLayout,
                       buf: np.ndarray) -> jnp.ndarray:
@@ -267,11 +209,7 @@ class CephaloProgram:
         # bf16 gathers halve the AllGather wire bytes (beyond-paper knob;
         # fp32 is the paper-faithful default); the grad ReduceScatter
         # precision is independent (fsdp.make_mixed_gather custom_vjp).
-        fn = fsdp.make_mixed_gather(g.layout, self.state_axes,
-                                    self.gather_dtype, self.grad_dtype,
-                                    replica_axes=self.replica_axes)
-        full = fn(shard)
-        return fsdp.unflatten_unit(g.layout, full, dtype=self.gather_dtype)
+        return self.substrate.unit_gather_fn(g)(shard)
 
     def _apply_remat(self, fn):
         if self.remat == "none":
@@ -349,7 +287,7 @@ class CephaloProgram:
                 body, (x_all, aux), shard_stack,
                 unroll=g.count if self.unroll else 1)
 
-        # head / loss: gather once, CE over all microbatches (layered)
+        # head / loss: gather once, CE over all microbatches in the round
         def head_fn(eshard, mshard, hshard, x_all):
             etree = self._gather(embed_g, eshard)
             mtree = self._gather(misc_g, mshard)
@@ -367,6 +305,73 @@ class CephaloProgram:
             pshards["embed"], pshards["misc"], hshard, x_all)
         return ce + cfg.router_aux_coef * aux
 
+    def _run_schedule(self, pshards, tokens, labels, weights, frontend
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Loss + shard-space grads under the configured GA schedule.
+
+        The schedule partitions the ℓ microbatches into collective rounds;
+        each round re-gathers every unit (full remat: the bwd re-gathers
+        too) and ReduceScatters its gradient contribution.  One round ==
+        layered GA; ℓ rounds of 1 == the FSDP-GA baseline.
+        """
+        chunks = self.schedule.chunks(self.ell)
+
+        def round_loss(ps, toks, labs, w, fe):
+            return self._loss_from_shards(ps, toks, labs, w, fe)
+
+        if len(chunks) == 1:
+            # Single-round (layered) fast path: one value_and_grad over
+            # the whole grid — bit-identical to the historical ga_mode.
+            return jax.value_and_grad(
+                lambda ps: round_loss(ps, tokens, labels, weights,
+                                      frontend))(pshards)
+
+        def round_grad(ps, start, size):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, 0)
+            t, l_, w = sl(tokens), sl(labels), sl(weights)
+            f = sl(frontend) if frontend is not None else None
+            return jax.value_and_grad(
+                lambda p: round_loss(p, t, l_, w, f))(ps)
+
+        # Group the rounds into runs of equal size and scan each run (one
+        # compiled body per distinct size — e.g. interleaved with odd ℓ is
+        # one scan over the [2]-rounds plus a single trailing [1] round).
+        # FSDP reshards (frees) gathered params after each round; the
+        # barrier ties each round's gathers to the running accumulator so
+        # XLA cannot CSE the re-gathers away when the loop is unrolled.
+        runs: List[List[int]] = []       # [offset, round size, count]
+        off = 0
+        for size in chunks:
+            if runs and runs[-1][1] == size:
+                runs[-1][2] += 1
+            else:
+                runs.append([off, size, 1])
+            off += size
+
+        loss = jnp.float32(0.0)
+        grads = jax.tree.map(jnp.zeros_like, pshards)
+        for run_off, size, count in runs:
+            if count == 1:
+                ps, _ = jax.lax.optimization_barrier((pshards, loss))
+                li, gi = round_grad(ps, run_off, size)
+                loss = loss + li
+                grads = jax.tree.map(jnp.add, grads, gi)
+                continue
+
+            starts = run_off + jnp.arange(count) * size
+
+            def scan_body(carry, start):
+                loss_acc, gacc = carry
+                ps, _ = jax.lax.optimization_barrier((pshards, loss_acc))
+                li, gi = round_grad(ps, start, size)
+                gacc = jax.tree.map(jnp.add, gacc, gi)
+                return (loss_acc + li, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(
+                scan_body, (loss, grads), starts,
+                unroll=count if self.unroll else 1)
+        return loss, grads
+
     def _device_step(self, *flat_args):
         """Runs inside shard_map.  Args: state leaves + batch leaves."""
         names = self._state_names()
@@ -382,41 +387,8 @@ class CephaloProgram:
             frontend = frontend[0]
 
         pshards = {g.name: state[f"{g.name}/p"] for g in self.groups}
-
-        if self.ga_mode == "layered":
-            loss, grads = jax.value_and_grad(
-                lambda ps: self._loss_from_shards(ps, tokens, labels,
-                                                  weights, frontend)
-            )(pshards)
-        elif self.ga_mode == "per_microbatch":
-            # FSDP-GA baseline: one full fwd+bwd per microbatch, grads
-            # accumulated — ℓ× the collective traffic.
-            def one_mb(i, loss_acc):
-                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i, 1, 0)
-                t, l_, w = sl(tokens), sl(labels), sl(weights)
-                f = sl(frontend) if frontend is not None else None
-                # FSDP reshards (frees) gathered params after each
-                # microbatch; the barrier ties this microbatch's gathers
-                # to the running accumulator so XLA cannot CSE the
-                # re-gathers away when the loop is unrolled.
-                ps, _ = jax.lax.optimization_barrier((pshards, loss_acc))
-                return jax.value_and_grad(
-                    lambda p: self._loss_from_shards(p, t, l_, w, f)
-                )(ps)
-
-            def scan_body(carry, i):
-                loss_acc, gacc = carry
-                li, gi = one_mb(i, loss_acc)
-                gacc = jax.tree.map(jnp.add, gacc, gi)
-                return (loss_acc + li, gacc), None
-
-            zero_g = jax.tree.map(jnp.zeros_like, pshards)
-            (loss, grads), _ = jax.lax.scan(
-                scan_body, (jnp.float32(0.0), zero_g),
-                jnp.arange(self.ell),
-                unroll=self.ell if self.unroll else 1)
-        else:
-            raise ValueError(self.ga_mode)
+        loss, grads = self._run_schedule(pshards, tokens, labels, weights,
+                                         frontend)
 
         # Adam on local shards (ZeRO-3: fully local update)
         new_state = {"step": state["step"] + 1}
@@ -446,7 +418,7 @@ class CephaloProgram:
 
     # --- public: the jitted step ------------------------------------------
     def build(self) -> Callable:
-        shard_map = jax.shard_map
+        from repro.core.engine.substrate import shard_map_call
 
         names = self._state_names()
         bnames = self._batch_names()
@@ -471,9 +443,7 @@ class CephaloProgram:
             loss = jax.lax.psum(loss, self.axes)
             return tuple(state_out) + (loss,)
 
-        sharded = shard_map(wrapped, mesh=self.mesh,
-                            in_specs=in_specs, out_specs=out_specs,
-                            check_vma=False)
+        sharded = shard_map_call(wrapped, self.mesh, in_specs, out_specs)
 
         def step(state: Dict[str, jax.Array],
                  batch: Dict[str, jax.Array]):

@@ -70,18 +70,19 @@ def make_homogeneous_batch(stream: SyntheticStream, step: int, batch: int,
     return out
 
 
-def make_plan_batch(stream: SyntheticStream, step: int, plan: Plan,
-                    ) -> Dict[str, np.ndarray]:
-    """Padded SPMD batch per the plan geometry.
+def plan_grid_from_block(plan: Plan, big: np.ndarray
+                         ) -> Dict[str, np.ndarray]:
+    """Lay a (B, seq+1) token block out on the plan's padded SPMD grid.
 
     Returns tokens/labels (n, ell_pad, m_pad, seq) and weights
     (n, ell_pad, m_pad, seq) with Eq. 1 scaling: real tokens get
     ``1/(B·seq)``; padding gets 0.  Rank *i*'s real rows are the first
-    ``ell_i`` microbatches × first ``m_i`` rows.
+    ``ell_i`` microbatches × first ``m_i`` rows.  The same block fed to
+    the MPMD runtime (``HeteroTrainer.rank_batches``) yields identical
+    gradients — the engine parity property (tests/test_engine.py).
     """
-    seq = stream.cfg.seq_len
-    n, lp, mp = plan.n, plan.ell_pad, plan.m_pad
-    big = stream.sample(step, plan.global_batch)
+    seq = big.shape[1] - 1
+    n, lp, mp = plan.n, max(plan.ell_pad, 1), max(plan.m_pad, 1)
     tokens = np.zeros((n, lp, mp, seq), np.int32)
     labels = np.zeros((n, lp, mp, seq), np.int32)
     weights = np.zeros((n, lp, mp, seq), np.float32)
@@ -96,6 +97,14 @@ def make_plan_batch(stream: SyntheticStream, step: int, plan: Plan,
             weights[i, l, : r.m] = w_val
     assert cursor == plan.global_batch
     return {"tokens": tokens, "labels": labels, "weights": weights}
+
+
+def make_plan_batch(stream: SyntheticStream, step: int, plan: Plan,
+                    ) -> Dict[str, np.ndarray]:
+    """Padded SPMD batch per the plan geometry (see
+    :func:`plan_grid_from_block` for the layout contract)."""
+    return plan_grid_from_block(plan, stream.sample(step,
+                                                    plan.global_batch))
 
 
 def iterate(stream: SyntheticStream, plan: Optional[Plan] = None,

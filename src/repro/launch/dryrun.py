@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import (ASSIGNED, INPUT_SHAPES, get_arch,
                                 input_specs, shape_applicable)
-from repro.core.layered_ga import CephaloProgram
+from repro.core.engine import CephaloProgram
 from repro.launch import serving
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import analysis as R
@@ -63,6 +63,9 @@ def _cost_dict(compiled) -> Dict[str, float]:
         c = compiled.cost_analysis()
     except Exception:
         return {}
+    # older jax returns a per-device list of dicts, newer a single dict
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
     if not c:
         return {}
     keep = {}

@@ -1,12 +1,16 @@
-"""Training launcher.
+"""Training launcher — both runtimes go through the execution engine.
 
-Two modes:
+Two substrates (``repro.core.engine.build_train_step``):
 
 * ``--runtime spmd`` — the Cephalo SPMD step on a jax mesh (homogeneous
-  pods; the production path).  Device count comes from the environment.
+  pods; the production path).  Device count comes from the environment;
+  the launcher synthesizes an even plan for it.
 * ``--runtime mpmd`` — the heterogeneous MPMD loopback runtime: profiles /
   builds the cost model for ``--cluster``, runs the Cephalo planner, then
   trains with truly uneven per-rank batches and state shards.
+
+``--ga-mode`` selects any registered gradient-accumulation schedule
+(layered / per_microbatch / interleaved / ...) on either substrate.
 
 Example (CPU, small model)::
 
@@ -18,18 +22,15 @@ Example (CPU, small model)::
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_arch
 from repro.core import device_specs as D
 from repro.core.cost_model import analytic_cluster_model
-from repro.core.hetero_trainer import HeteroTrainer
-from repro.core.layered_ga import CephaloProgram
+from repro.core.engine import (build_train_step, homogeneous_plan,
+                               list_schedules)
 from repro.core.model_stats import build_model_stats
 from repro.core.planner import auto_solve
 from repro.data.pipeline import DataConfig, SyntheticStream
@@ -43,6 +44,21 @@ CLUSTERS = {
 }
 
 
+def _train_loop(engine, args, plan, state=None) -> object:
+    stream = SyntheticStream(DataConfig(engine.cfg.vocab_size, args.seq,
+                                        seed=args.seed))
+    if state is None:
+        state = engine.init_state(jax.random.PRNGKey(args.seed))
+    t0 = time.time()
+    for step in range(args.steps):
+        big = stream.sample(step, plan.global_batch)
+        state, loss = engine.step(state, big)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:>5} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s wall)")
+    return state
+
+
 def run_mpmd(args) -> None:
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -54,25 +70,19 @@ def run_mpmd(args) -> None:
     print(plan.summary())
     if not plan.feasible:
         raise SystemExit(f"infeasible: {plan.infeasible_reason}")
-    trainer = HeteroTrainer(cfg, plan, AdamConfig(lr=args.lr),
-                            seq_len=args.seq)
-    shards = trainer.init_shards(jax.random.PRNGKey(args.seed))
-    print(trainer.memory_report(shards))
-    stream = SyntheticStream(DataConfig(cfg.vocab_size, args.seq,
-                                        seed=args.seed))
-    sim = trainer.simulated_iteration_seconds()
+    engine = build_train_step(cfg, plan, schedule=args.ga_mode,
+                              substrate="loopback",
+                              adam=AdamConfig(lr=args.lr),
+                              seq_len=args.seq)
+    state = engine.init_state(jax.random.PRNGKey(args.seed))
+    print(engine.memory_report(state))
+    sim = engine.simulated_iteration_seconds()
     print(f"simulated iteration: {sim['iteration_s']*1e3:.1f} ms "
           f"({sim['throughput_samples_s']:.2f} samples/s)")
-    t0 = time.time()
-    for step in range(args.steps):
-        big = stream.sample(step, plan.global_batch)
-        shards, loss = trainer.step(shards, big)
-        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
-            print(f"step {step:>5} loss {loss:.4f} "
-                  f"({time.time() - t0:.1f}s wall)")
+    state = _train_loop(engine, args, plan, state=state)
     if args.checkpoint:
         from repro.checkpoint import checkpointing as C
-        C.save(args.checkpoint, args.steps, shards,
+        C.save(args.checkpoint, args.steps, state,
                {"plan": plan.to_json()})
         print(f"saved checkpoint to {args.checkpoint}")
 
@@ -86,27 +96,13 @@ def run_spmd(args) -> None:
         (n // 2, 2) if n % 2 == 0 else (n, 1))
     mesh = jax.make_mesh(shape, ("data", "model"))
     per_dev = max(args.batch // n, 1)
-    prog = CephaloProgram(cfg, mesh, ell=args.ell,
-                          m=max(per_dev // args.ell, 1), seq=args.seq,
-                          adam=AdamConfig(lr=args.lr),
-                          ga_mode=args.ga_mode)
-    state = prog.init_state(jax.random.PRNGKey(args.seed))
-    step_fn = prog.jit_step()
-    stream = SyntheticStream(DataConfig(cfg.vocab_size, args.seq,
-                                        seed=args.seed))
-    geom_b = n * prog.ell * prog.m
-    t0 = time.time()
-    for step in range(args.steps):
-        big = stream.sample(step, geom_b)
-        toks = big[:, :-1].reshape(n, prog.ell, prog.m, args.seq)
-        labs = big[:, 1:].reshape(n, prog.ell, prog.m, args.seq)
-        w = np.full(toks.shape, 1.0 / (geom_b * args.seq), np.float32)
-        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs),
-                 "weights": jnp.asarray(w)}
-        state, loss = step_fn(state, batch)
-        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
-            print(f"step {step:>5} loss {float(loss):.4f} "
-                  f"({time.time() - t0:.1f}s wall)")
+    plan = homogeneous_plan(n, ell=args.ell,
+                            m=max(per_dev // args.ell, 1), device="host")
+    engine = build_train_step(cfg, plan, schedule=args.ga_mode,
+                              substrate="shard_map", mesh=mesh,
+                              adam=AdamConfig(lr=args.lr),
+                              seq_len=args.seq)
+    _train_loop(engine, args, plan)
 
 
 def main() -> None:
@@ -122,7 +118,7 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ga-mode", default="layered",
-                    choices=("layered", "per_microbatch"))
+                    choices=list_schedules())
     ap.add_argument("--checkpoint", default="")
     args = ap.parse_args()
     if args.runtime == "mpmd":

@@ -15,6 +15,70 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+# ---------------------------------------------------------------------------
+# hypothesis fallback: the property-based tests must run (on fixed,
+# deterministically sampled cases) even on a clean interpreter without
+# hypothesis installed.  The real package wins when present.
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample          # rng -> value
+
+    def _integers(lo, hi):
+        def sample(rng):
+            return rng.choice((lo, hi, rng.randint(lo, hi)))
+        return _Strategy(sample)
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.choice((False, True)))
+
+    def _sampled_from(xs):
+        xs = list(xs)
+        return _Strategy(lambda rng: rng.choice(xs))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _given(**strats):
+        keys = sorted(strats)
+
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"fallback:{fn.__name__}")
+                for _ in range(10):
+                    drawn = {k: strats[k].sample(rng) for k in keys}
+                    fn(*args, **drawn, **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(*_a, **_kw):
+        return lambda fn: fn
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.__doc__ = ("Minimal deterministic stand-in installed by "
+                    "tests/conftest.py; `pip install hypothesis` for real "
+                    "property-based testing.")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.floats = _floats
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
+
 def run_subprocess_devices(code: str, n_devices: int = 8,
                            timeout: int = 900) -> str:
     """Run ``code`` in a subprocess with N fake host devices."""

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+# real hypothesis when installed; otherwise the deterministic sampling
+# shim tests/conftest.py registers in sys.modules before collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fsdp
