@@ -35,7 +35,8 @@ def main() -> None:
                     help="skip the subprocess/HLO and Cluster-B sections")
     args = ap.parse_args()
 
-    from benchmarks import grad_accum, model_accuracy, roofline_table
+    from benchmarks import (elastic_recovery, grad_accum, model_accuracy,
+                            roofline_table)
     from benchmarks import tables as T
     from benchmarks import uneven_overhead
 
@@ -53,6 +54,8 @@ def main() -> None:
          lambda rows: f"mean_are={rows[-1]['are']}"),
         ("appc_padding_model", uneven_overhead.padding_overhead_model,
          lambda rows: f"max_spmd_overhead={max(r['spmd_padded_overhead'] for r in rows)}"),
+        ("elastic_recovery", elastic_recovery.rows,
+         lambda rows: f"recovery_ratio={next(r['ratio'] for r in rows if r['scenario'] == 'recovery_ratio')}"),
     ]
     if not args.fast:
         sections += [

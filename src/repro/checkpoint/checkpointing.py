@@ -9,8 +9,13 @@ Layout on disk::
 Works for both the SPMD path (save from host views of the addressable
 shards) and the MPMD loopback runtime.  Restores are shape-checked against
 the manifest; ratio changes between save and restore go through
-:func:`reshard` (gather → re-slice), which is how Cephalo handles elastic
-re-planning when the cluster composition changes.
+:func:`reshard` (gather → re-slice) — the *offline* analogue of the
+paper's elastic re-planning when cluster composition changes.  The
+*online* path (no filesystem round-trip) is the engine surface
+``export_state``/``import_state`` used by
+:func:`repro.core.engine.elastic.migrate_state`: to restart under a new
+plan, save the exported ``{"step","p","m","v"}`` pytrees with
+:func:`save` and feed them to any engine's ``import_state``.
 """
 
 from __future__ import annotations
@@ -80,7 +85,9 @@ def reshard(flat_shards: Sequence[np.ndarray],
             new_sizes: Sequence[int]) -> List[np.ndarray]:
     """Re-slice a flat ZeRO-3 buffer under new shard sizes (elastic
     re-planning: cluster composition changed → planner emitted new
-    ratios)."""
+    ratios).  For live (in-process) migration prefer
+    :func:`repro.core.engine.elastic.migrate_state`, which routes the
+    same re-slicing through the engine's substrate layouts."""
     full = np.concatenate([s[:n] for s, n in zip(flat_shards, old_sizes)])
     assert full.size == sum(new_sizes), (full.size, sum(new_sizes))
     out, off = [], 0

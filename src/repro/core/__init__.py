@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The Cephalo system core — the paper's primary contribution.
+
+Implements the pipeline of paper Secs. 2-3: device specs and model
+stats feed the linear cost models (Sec. 2.3, ``cost_model`` /
+``profiler``), the DP optimizer picks per-rank batch/microbatch/state
+assignments (Sec. 2.4, ``planner`` / ``partition``), and the uneven
+ZeRO-3 primitives (``fsdp``) plus the execution engine (``engine``)
+run the resulting plans on the SPMD (``layered_ga``) and MPMD
+(``hetero_trainer``) runtimes.
+"""

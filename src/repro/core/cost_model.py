@@ -178,6 +178,10 @@ class MemoryModel:
 
 
 def fit_piecewise(samples: Sequence[Tuple[int, float]]) -> LatencyModel:
+    """Fit a :class:`LatencyModel` from ``(m, seconds)`` samples — the
+    single fitting path shared by the offline profiler (Sec. 3.1) and
+    the elastic runtime's telemetry refit
+    (:func:`repro.core.profiler.refit_cluster_model`)."""
     ms, ts = zip(*samples)
     return LatencyModel(ms, ts)
 

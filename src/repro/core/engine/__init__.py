@@ -26,10 +26,18 @@ for them (DESIGN.md §Engine):
   schedule=..., substrate=...)``: one entry point that returns a uniform
   ``TrainEngine`` (init_state / step / gather_params) on either
   substrate, for any registered schedule.
+* :mod:`repro.core.engine.elastic` — **ElasticEngine**: the closed-loop
+  replanning runtime on top of all three seams — step-time telemetry
+  refits the Sec. 2.3 latency models, ``auto_solve`` re-runs the Sec. 2.4
+  DP, and live state migration reshards params + Adam moments between
+  plans through the substrate seam (DESIGN.md §Elastic, docs/elastic.md).
 """
 
 from repro.core.engine.api import (MpmdEngine, SpmdEngine, TrainEngine,
                                    build_train_step, homogeneous_plan)
+from repro.core.engine.elastic import (CostModelOracle, ElasticConfig,
+                                       ElasticEngine, TelemetryBuffer,
+                                       migrate_state)
 from repro.core.engine.schedules import (Schedule, chunked, get_schedule,
                                          list_schedules, register_schedule)
 from repro.core.engine.substrate import (CollectiveSubstrate,
@@ -39,11 +47,12 @@ from repro.core.engine.units import (UnitGroup, UnitPlanner, element_tree,
                                      merge_params, split_params)
 
 __all__ = [
-    "CollectiveSubstrate", "LoopbackSubstrate", "MpmdEngine", "Schedule",
-    "ShardMapSubstrate", "SpmdEngine", "TrainEngine", "UnitGroup",
-    "UnitPlanner", "build_train_step", "chunked", "element_tree",
-    "get_schedule", "homogeneous_plan", "list_schedules", "merge_params",
-    "register_schedule", "split_params",
+    "CollectiveSubstrate", "CostModelOracle", "ElasticConfig",
+    "ElasticEngine", "LoopbackSubstrate", "MpmdEngine", "Schedule",
+    "ShardMapSubstrate", "SpmdEngine", "TelemetryBuffer", "TrainEngine",
+    "UnitGroup", "UnitPlanner", "build_train_step", "chunked",
+    "element_tree", "get_schedule", "homogeneous_plan", "list_schedules",
+    "merge_params", "migrate_state", "register_schedule", "split_params",
     # lazy re-exports (PEP 562): "CephaloProgram", "HeteroTrainer"
 ]
 

@@ -65,6 +65,21 @@ class TrainEngine(abc.ABC):
     def gather_params(self, state: Any) -> Dict[str, Any]:
         """Host-side: reassemble the full model param pytree."""
 
+    @abc.abstractmethod
+    def export_state(self, state: Any) -> Dict[str, Any]:
+        """Substrate-independent full training state:
+        ``{"step": int, "p"/"m"/"v": model-shaped pytrees}``.
+
+        One AllGather per part through the engine's CollectiveSubstrate —
+        the export half of elastic state migration
+        (:mod:`repro.core.engine.elastic`)."""
+
+    @abc.abstractmethod
+    def import_state(self, exported: Dict[str, Any]) -> Any:
+        """Lay an :meth:`export_state` payload out on THIS engine's plan:
+        params and Adam moments land on the new shard layouts, the step
+        counter carries over.  The import half of elastic migration."""
+
 
 class SpmdEngine(TrainEngine):
     """shard_map substrate: the plan's padded grid on plan.n devices."""
@@ -108,6 +123,17 @@ class SpmdEngine(TrainEngine):
     def gather_params(self, state) -> Dict[str, Any]:
         return self.program.gather_params(state)
 
+    def export_state(self, state) -> Dict[str, Any]:
+        return {"step": int(np.asarray(state["step"])),
+                "p": self.program.gather_part(state, "p"),
+                "m": self.program.gather_part(state, "m"),
+                "v": self.program.gather_part(state, "v")}
+
+    def import_state(self, exported: Dict[str, Any]):
+        return self.program.state_from_trees(
+            exported["p"], exported.get("m"), exported.get("v"),
+            step=int(exported.get("step", 0)))
+
 
 class MpmdEngine(TrainEngine):
     """Loopback substrate: per-rank unpadded programs on one process."""
@@ -129,6 +155,20 @@ class MpmdEngine(TrainEngine):
     def gather_params(self, state) -> Dict[str, Any]:
         return self.trainer.software_allgather(state)
 
+    def export_state(self, state) -> Dict[str, Any]:
+        sub = self.trainer.substrate
+        return {"step": int(state[0]["step"]) if state else 0,
+                "p": sub.allgather_params(state, "p"),
+                "m": sub.allgather_params(state, "m"),
+                "v": sub.allgather_params(state, "v")}
+
+    def import_state(self, exported: Dict[str, Any]):
+        shards = self.trainer.substrate.shard_state(
+            exported["p"], exported.get("m"), exported.get("v"))
+        for s in shards:
+            s["step"] = int(exported.get("step", 0))
+        return shards
+
     # MPMD extras surfaced for the launcher
     def memory_report(self, state) -> str:
         return self.trainer.memory_report(state)
@@ -143,6 +183,9 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
                      adam: AdamConfig = AdamConfig(),
                      seq_len: int = 512,
                      mesh=None,
+                     elastic=None,
+                     cost_model=None,
+                     oracle=None,
                      **knobs) -> TrainEngine:
     """Build a train engine for ``(cfg, plan)`` on the chosen substrate.
 
@@ -151,7 +194,27 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
     ``"loopback"``, or ``"auto"`` (shard_map iff enough devices exist for
     the plan).  Extra ``knobs`` (``gather_dtype``, ``remat``, ``unroll``,
     ``state_axes``, ...) are forwarded to the SPMD program.
+
+    ``elastic`` — an :class:`repro.core.engine.elastic.ElasticConfig`
+    (or ``True`` for defaults) returns an
+    :class:`~repro.core.engine.elastic.ElasticEngine` that replans and
+    live-migrates state when runtime telemetry drifts from the plan;
+    requires ``cost_model`` (the :class:`ClusterCostModel` the plan came
+    from).  ``oracle`` optionally overrides the latency-measurement
+    source (see ``elastic.CostModelOracle``).
     """
+    if elastic is not None and elastic is not False:
+        from repro.core.engine.elastic import ElasticConfig, ElasticEngine
+        if cost_model is None:
+            raise ValueError("elastic replanning needs cost_model= (the "
+                             "ClusterCostModel the plan was solved from)")
+        ecfg = ElasticConfig() if elastic is True else elastic
+        return ElasticEngine(cfg, cost_model, plan=plan,
+                             schedule=schedule, substrate=substrate,
+                             adam=adam, seq_len=seq_len, mesh=mesh,
+                             elastic=ecfg, oracle=oracle, **knobs)
+    if cost_model is not None or oracle is not None:
+        raise ValueError("cost_model=/oracle= only apply with elastic=")
     sched = get_schedule(schedule)
     if substrate == "auto":
         substrate = "shard_map" if (mesh is not None or

@@ -1,7 +1,8 @@
 """CollectiveSubstrate — how gather/scatter are actually performed.
 
 Schedules (``repro.core.engine.schedules``) decide *when* the per-unit
-collectives happen; substrates decide *how*:
+collectives of the paper's Fig. 4 rounds happen; substrates decide
+*how* (uneven-shard AllGather/ReduceScatter, paper Sec. 2 / App. C):
 
 * :class:`ShardMapSubstrate` — in-graph ``lax`` collectives inside a
   ``jax.shard_map`` SPMD program.  Forward AllGather and backward
@@ -26,7 +27,7 @@ on compiled HLO instead (``repro.roofline.analysis.parse_collectives``).
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable, Dict, List, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -114,15 +115,41 @@ class LoopbackSubstrate(CollectiveSubstrate):
         self.n = planner.n
 
     # --- state layout -------------------------------------------------------
-    def shard_state(self, params: Dict[str, Any]
+    def shard_tree(self, tree: Dict[str, Any]
+                   ) -> List[Dict[str, np.ndarray]]:
+        """Any full model-shaped pytree → per-rank {unit: ragged buffer}.
+
+        The single layout path for params, gradients, and optimizer
+        moments — state sharding, gradient scatter, and elastic state
+        migration all go through here, so they can never desynchronize.
+        """
+        grouped = self.planner.split(tree)
+        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
+        for g in self.planner.groups:
+            for r, s in enumerate(self._shard_group(g, grouped[g.name])):
+                out[r][g.name] = s
+        return out
+
+    def shard_state(self, params: Dict[str, Any],
+                    m_tree: Optional[Dict[str, Any]] = None,
+                    v_tree: Optional[Dict[str, Any]] = None,
                     ) -> List[Dict[str, Dict[str, np.ndarray]]]:
-        """Full params → per-rank {unit: {"p","m","v"}} ragged shards."""
-        grouped = self.planner.split(params)
+        """Full params (+ optional Adam moment trees) → per-rank
+        {unit: {"p","m","v"}} ragged shards.  Missing moments init to 0."""
+        p_shards = self.shard_tree(params)
+        m_shards = self.shard_tree(m_tree) if m_tree is not None else None
+        v_shards = self.shard_tree(v_tree) if v_tree is not None else None
         shards: List[Dict[str, Any]] = [dict() for _ in range(self.n)]
         for g in self.planner.groups:
-            for r, p in enumerate(self._shard_group(g, grouped[g.name])):
-                shards[r][g.name] = {"p": p, "m": np.zeros_like(p),
-                                     "v": np.zeros_like(p)}
+            for r in range(self.n):
+                p = p_shards[r][g.name]
+                shards[r][g.name] = {
+                    "p": p,
+                    "m": (m_shards[r][g.name] if m_shards is not None
+                          else np.zeros_like(p)),
+                    "v": (v_shards[r][g.name] if v_shards is not None
+                          else np.zeros_like(p)),
+                }
         return shards
 
     def _shard_group(self, g: UnitGroup, tree: Any) -> List[np.ndarray]:
@@ -168,15 +195,11 @@ class LoopbackSubstrate(CollectiveSubstrate):
     def reduce_scatter_grads(self, grads_full: Any
                              ) -> List[Dict[str, np.ndarray]]:
         """Full-grad pytree → per-rank shard slices (already summed).
-        Uses the same ragged layout path as :meth:`shard_state`, so the
-        gradient scatter can never desynchronize from the state layout."""
+        Uses the same ragged layout path as :meth:`shard_state`
+        (:meth:`shard_tree`), so the gradient scatter can never
+        desynchronize from the state layout."""
         self.stats["reduce_scatter"] += 1
-        grouped = self.planner.split(grads_full)
-        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
-        for g in self.planner.groups:
-            for r, s in enumerate(self._shard_group(g, grouped[g.name])):
-                out[r][g.name] = s
-        return out
+        return self.shard_tree(grads_full)
 
     def accumulate_grad_shards(self, acc, new):
         """Shard-space gradient accumulation across collective rounds."""

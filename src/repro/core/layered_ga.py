@@ -150,39 +150,59 @@ class CephaloProgram:
         s = NamedSharding(self.mesh, P(self.axes))
         return {k: s for k in self.batch_shapes()}
 
-    def init_state(self, key: jax.Array) -> Dict[str, jax.Array]:
-        """Materialize real state (small models / examples only)."""
-        params = M.init_params(self.cfg, key)
-        grouped = split_params(self.cfg, params)
-        out: Dict[str, jax.Array] = {"step": jnp.int32(0)}
+    def _shard_group_tree(self, g: UnitGroup, tree: Any) -> jnp.ndarray:
+        """One unit group's full tree → padded shard buffer(s): a
+        (N·P_max,) vector, or a (count, N·P_max) stack for stage units."""
+        if g.count > 1:
+            flats = []
+            for i in range(g.count):
+                elem = jax.tree.map(lambda a, i=i: a[i], tree)
+                flats.append(fsdp.flatten_unit(g.layout, elem))
+            return jnp.stack(
+                [jnp.concatenate(fsdp.shard_unit(g.layout, f))
+                 for f in flats])                # (count, N*P_max)
+        flat = fsdp.flatten_unit(g.layout, tree)
+        return jnp.concatenate(fsdp.shard_unit(g.layout, flat))
+
+    def state_from_trees(self, params: Dict[str, Any],
+                         m_tree: Optional[Dict[str, Any]] = None,
+                         v_tree: Optional[Dict[str, Any]] = None,
+                         step: int = 0) -> Dict[str, jax.Array]:
+        """Materialize sharded state from full model-shaped pytrees.
+
+        The import half of the elastic state-migration seam: params and
+        (optionally) Adam moment trees are laid out on THIS program's
+        shard layouts.  Missing moments initialize to zero."""
+        grouped_p = split_params(self.cfg, params)
+        grouped_m = split_params(self.cfg, m_tree) if m_tree is not None \
+            else None
+        grouped_v = split_params(self.cfg, v_tree) if v_tree is not None \
+            else None
+        out: Dict[str, jax.Array] = {"step": jnp.int32(step)}
         for g in self.groups:
-            tree = grouped[g.name]
-            if g.count > 1:
-                flats = []
-                for i in range(g.count):
-                    elem = jax.tree.map(lambda a: a[i], tree)
-                    flats.append(fsdp.flatten_unit(g.layout, elem))
-                flat = jnp.stack(flats)          # (count, padded)
-                shard_stack = jnp.stack(
-                    [jnp.concatenate(fsdp.shard_unit(g.layout, f))
-                     for f in flat])             # (count, N*P_max)
-                out[f"{g.name}/p"] = shard_stack
-                zeros = jnp.zeros_like(shard_stack)
-            else:
-                flat = fsdp.flatten_unit(g.layout, tree)
-                shard_vec = jnp.concatenate(fsdp.shard_unit(g.layout, flat))
-                out[f"{g.name}/p"] = shard_vec
-                zeros = jnp.zeros_like(shard_vec)
-            out[f"{g.name}/m"] = zeros
-            out[f"{g.name}/v"] = jnp.array(zeros)
+            pbuf = self._shard_group_tree(g, grouped_p[g.name])
+            out[f"{g.name}/p"] = pbuf
+            out[f"{g.name}/m"] = (
+                self._shard_group_tree(g, grouped_m[g.name])
+                if grouped_m is not None else jnp.zeros_like(pbuf))
+            out[f"{g.name}/v"] = (
+                self._shard_group_tree(g, grouped_v[g.name])
+                if grouped_v is not None else jnp.zeros_like(pbuf))
         shardings = self.state_shardings()
         return {k: jax.device_put(v, shardings[k]) for k, v in out.items()}
 
-    def gather_params(self, state: Dict[str, jax.Array]) -> Dict[str, Any]:
-        """Host-side: reassemble the full model params pytree (tests)."""
+    def init_state(self, key: jax.Array) -> Dict[str, jax.Array]:
+        """Materialize real state (small models / examples only)."""
+        return self.state_from_trees(M.init_params(self.cfg, key))
+
+    def gather_part(self, state: Dict[str, jax.Array],
+                    part: str = "p") -> Dict[str, Any]:
+        """Host-side: reassemble one full model-shaped pytree from the
+        sharded state.  ``part`` — "p" (params), "m" or "v" (moments).
+        The export half of the elastic state-migration seam."""
         grouped: Dict[str, Any] = {}
         for g in self.groups:
-            buf = np.asarray(state[f"{g.name}/p"])
+            buf = np.asarray(state[f"{g.name}/{part}"])
             if g.count > 1:
                 elems = []
                 for i in range(g.count):
@@ -194,6 +214,10 @@ class CephaloProgram:
                 flat = self._unshard_host(g.layout, buf)
                 grouped[g.name] = fsdp.unflatten_unit(g.layout, flat)
         return merge_params(grouped, len(self.stages))
+
+    def gather_params(self, state: Dict[str, jax.Array]) -> Dict[str, Any]:
+        """Host-side: reassemble the full model params pytree (tests)."""
+        return self.gather_part(state, "p")
 
     def _unshard_host(self, layout: fsdp.UnitLayout,
                       buf: np.ndarray) -> jnp.ndarray:

@@ -293,6 +293,39 @@ def auto_solve(cm: ClusterCostModel, batch: int) -> Plan:
     return solve_scaled(cm, batch)
 
 
+def evaluate_plan(cm: ClusterCostModel, plan: Plan) -> dict:
+    """Predicted timings of a FIXED plan under a (possibly different)
+    cost model — the elastic runtime's "what is the old plan worth on
+    the cluster as observed now" query.  ``plan.ranks`` must correspond
+    1:1 to ``cm.per_rank``.
+
+    Returns ``{"layer_s", "iter_s", "throughput"}`` computed with the
+    same Alg. 1 per-layer time as the solver (max(Tf, AG') +
+    max(Tb, AG'+RS')), including the solver's per-rank uneven-collective
+    criterion (a rank pays the overhead iff it cannot hold an even state
+    share on top of its compute memory), so a re-solved plan's
+    ``predicted_*`` fields and this function agree by construction.
+    """
+    if len(plan.ranks) != cm.cluster.n:
+        raise ValueError(
+            f"plan has {len(plan.ranks)} ranks, cost model "
+            f"{cm.cluster.n} — evaluate_plan needs a 1:1 correspondence")
+    even_state = cm.even_state_bytes_per_rank()
+    worst = 0.0
+    head_s = 0.0
+    for i, r in enumerate(plan.ranks):
+        if r.b == 0:
+            continue
+        dc = cm.per_rank[i]
+        uneven = dc.memory(r.m) + even_state > dc.mem_cap()
+        t, _, _ = _layer_time(cm, i, r.m, r.ell, uneven)
+        worst = max(worst, t)
+        head_s = max(head_s, dc.head_time(r.m, r.ell))
+    iter_s = worst * cm.model.n_layers + head_s
+    return {"layer_s": worst, "iter_s": iter_s,
+            "throughput": plan.global_batch / iter_s if iter_s else 0.0}
+
+
 # ---------------------------------------------------------------------------
 # Ablation baselines (Fig. 7) and classic FSDP
 # ---------------------------------------------------------------------------

@@ -11,6 +11,12 @@ Memory profiling note: CUDA exposes per-device allocator stats; XLA:CPU
 does not.  The measured mode therefore pairs measured latency with the
 *analytic* memory model — the paper's memory model is linear-in-m with
 coefficients from activation byte counts, which we can compute exactly.
+
+:func:`refit_cluster_model` is the *online* half of the same machinery:
+the elastic runtime (:mod:`repro.core.engine.elastic`) feeds it per-rank
+``(m, seconds)`` telemetry collected mid-training, and it rebuilds the
+cost model through the identical :func:`fit_piecewise` path — the offline
+profile and the runtime refit can never use different fitting code.
 """
 
 from __future__ import annotations
@@ -27,9 +33,14 @@ from repro.core.model_stats import build_model_stats
 from repro.models import blocks as B
 from repro.models import model as M
 
+#: The standard small-m profiling sweep (Sec. 3.1).  Shared by the
+#: offline profile below and the elastic runtime's active probe
+#: (repro.core.engine.elastic) so both fit on the same grid.
+PROFILE_MS: Tuple[int, ...] = (1, 2, 3, 4, 6, 8)
+
 
 def profile_layer_forward(cfg: ArchConfig, seq: int,
-                          ms: Sequence[int] = (1, 2, 3, 4, 6, 8),
+                          ms: Sequence[int] = PROFILE_MS,
                           repeats: int = 3) -> List[Tuple[int, float]]:
     """Measured (m, seconds) samples for one block's forward pass."""
     key = jax.random.PRNGKey(0)
@@ -56,7 +67,7 @@ def profile_layer_forward(cfg: ArchConfig, seq: int,
 
 
 def profile_layer_backward(cfg: ArchConfig, seq: int,
-                           ms: Sequence[int] = (1, 2, 3, 4, 6, 8),
+                           ms: Sequence[int] = PROFILE_MS,
                            repeats: int = 3) -> List[Tuple[int, float]]:
     key = jax.random.PRNGKey(0)
     stages = M.build_stages(cfg)
@@ -88,6 +99,35 @@ def profile_layer_backward(cfg: ArchConfig, seq: int,
 def fit_latency(samples: Sequence[Tuple[int, float]]) -> LatencyModel:
     ms, ts = zip(*samples)
     return LatencyModel(ms, ts)
+
+
+def refit_cluster_model(cm, fwd_samples: Sequence[Sequence[Tuple[int, float]]],
+                        bwd_samples: Sequence[Sequence[Tuple[int, float]]],
+                        min_samples: int = 2):
+    """Refit per-rank latency models from runtime telemetry.
+
+    ``fwd_samples[i]`` / ``bwd_samples[i]`` — rank *i*'s observed
+    ``(m, seconds)`` single-layer samples (the elastic runtime's passive
+    step timings plus its active probe sweep).  Ranks with fewer than
+    ``min_samples`` points keep their previous model, so a partial
+    telemetry window never degrades the planner's inputs.  Memory, head,
+    and comm models are latency-drift-invariant and carried over.
+
+    Returns a new :class:`~repro.core.cost_model.ClusterCostModel`; the
+    input is not mutated (plans already solved against it stay valid for
+    comparison).
+    """
+    from repro.core.cost_model import (ClusterCostModel, DeviceCost,
+                                       fit_piecewise)
+    per_rank = []
+    for i, dc in enumerate(cm.per_rank):
+        fs = list(fwd_samples[i]) if i < len(fwd_samples) else []
+        bs = list(bwd_samples[i]) if i < len(bwd_samples) else []
+        t_fwd = fit_piecewise(fs) if len(fs) >= min_samples else dc.t_fwd
+        t_bwd = fit_piecewise(bs) if len(bs) >= min_samples else dc.t_bwd
+        per_rank.append(DeviceCost(dc.spec, t_fwd, t_bwd, dc.memory,
+                                   dc.t_head))
+    return ClusterCostModel(cm.cluster, cm.model, per_rank, cm.comm)
 
 
 def analytic_memory(cfg: ArchConfig, seq: int) -> MemoryModel:

@@ -12,11 +12,19 @@ Two substrates (``repro.core.engine.build_train_step``):
 ``--ga-mode`` selects any registered gradient-accumulation schedule
 (layered / per_microbatch / interleaved / ...) on either substrate.
 
+``--elastic`` wraps the MPMD runtime in the elastic replanning engine
+(``repro.core.engine.elastic``): step-time telemetry refits the cost
+model, the planner re-solves when observed imbalance crosses the
+threshold, and training state (params + Adam moments) live-migrates to
+the new plan.  ``--straggler RANK:FACTOR@STEP`` injects a simulated
+slowdown mid-run to exercise the loop (e.g. ``1:3.0@5`` makes rank 1 3x
+slower from step 5).
+
 Example (CPU, small model)::
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
         --reduced --steps 20 --batch 16 --seq 64 --runtime mpmd \
-        --cluster cluster-a
+        --cluster cluster-a --elastic --straggler 0:2.5@8
 """
 
 from __future__ import annotations
@@ -44,19 +52,28 @@ CLUSTERS = {
 }
 
 
-def _train_loop(engine, args, plan, state=None) -> object:
+def _train_loop(engine, args, plan, state=None, on_step=None) -> object:
     stream = SyntheticStream(DataConfig(engine.cfg.vocab_size, args.seq,
                                         seed=args.seed))
     if state is None:
         state = engine.init_state(jax.random.PRNGKey(args.seed))
     t0 = time.time()
     for step in range(args.steps):
+        if on_step is not None:
+            on_step(step)
         big = stream.sample(step, plan.global_batch)
         state, loss = engine.step(state, big)
         if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
             print(f"step {step:>5} loss {float(loss):.4f} "
                   f"({time.time() - t0:.1f}s wall)")
     return state
+
+
+def _parse_straggler(spec: str):
+    """'RANK:FACTOR@STEP' → (rank, factor, step)."""
+    head, step = spec.split("@")
+    rank, factor = head.split(":")
+    return int(rank), float(factor), int(step)
 
 
 def run_mpmd(args) -> None:
@@ -70,20 +87,48 @@ def run_mpmd(args) -> None:
     print(plan.summary())
     if not plan.feasible:
         raise SystemExit(f"infeasible: {plan.infeasible_reason}")
+    on_step = None
+    elastic_kw = {}
+    if args.elastic:
+        from repro.core.engine.elastic import (CostModelOracle,
+                                               ElasticConfig)
+        oracle = CostModelOracle(cm)
+        elastic_kw = dict(elastic=ElasticConfig(), cost_model=cm,
+                          oracle=oracle)
+        if args.straggler:
+            rank, factor, at_step = _parse_straggler(args.straggler)
+            if not 0 <= rank < cluster.n:
+                raise SystemExit(
+                    f"--straggler rank {rank} out of range for "
+                    f"{cluster.name} (n={cluster.n})")
+
+            def on_step(step, _r=rank, _f=factor, _s=at_step):
+                if step == _s:
+                    print(f"-- injecting straggler: rank {_r} x{_f} --")
+                    oracle.degrade(_r, _f)
+    elif args.straggler:
+        raise SystemExit("--straggler needs --elastic")
     engine = build_train_step(cfg, plan, schedule=args.ga_mode,
                               substrate="loopback",
                               adam=AdamConfig(lr=args.lr),
-                              seq_len=args.seq)
+                              seq_len=args.seq, **elastic_kw)
     state = engine.init_state(jax.random.PRNGKey(args.seed))
     print(engine.memory_report(state))
     sim = engine.simulated_iteration_seconds()
     print(f"simulated iteration: {sim['iteration_s']*1e3:.1f} ms "
           f"({sim['throughput_samples_s']:.2f} samples/s)")
-    state = _train_loop(engine, args, plan, state=state)
+    state = _train_loop(engine, args, plan, state=state, on_step=on_step)
+    if args.elastic:
+        for ev in engine.events:
+            print(f"replan@{ev.step} adopted={ev.adopted}: {ev.reason}")
+        if engine.plan is not plan:
+            print("final plan after replanning:")
+            print(engine.plan.summary())
     if args.checkpoint:
         from repro.checkpoint import checkpointing as C
-        C.save(args.checkpoint, args.steps, state,
-               {"plan": plan.to_json()})
+        final_plan = engine.plan if args.elastic else plan
+        C.save(args.checkpoint, args.steps, state, {},
+               meta={"plan": final_plan.to_json()})
         print(f"saved checkpoint to {args.checkpoint}")
 
 
@@ -119,8 +164,17 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ga-mode", default="layered",
                     choices=list_schedules())
+    ap.add_argument("--elastic", action="store_true",
+                    help="enable the replanning runtime (mpmd only)")
+    ap.add_argument("--straggler", default="",
+                    help="inject a slowdown: RANK:FACTOR@STEP "
+                         "(requires --elastic)")
     ap.add_argument("--checkpoint", default="")
     args = ap.parse_args()
+    if args.runtime != "mpmd" and (args.elastic or args.straggler):
+        raise SystemExit("--elastic/--straggler require --runtime mpmd "
+                         "(the replanning loop drives the planner, which "
+                         "the homogeneous SPMD launcher bypasses)")
     if args.runtime == "mpmd":
         run_mpmd(args)
     else:

@@ -86,9 +86,11 @@ def dense_block_init(key: jax.Array, cfg: ArchConfig,
     return p
 
 
-def _ffn(params: dict, x: jax.Array, cfg: ArchConfig):
+def _ffn(params: dict, x: jax.Array, cfg: ArchConfig,
+         dropless: bool = False):
     if cfg.is_moe:
-        return moe_apply(params["moe"], x, top_k=cfg.experts_per_token)
+        return moe_apply(params["moe"], x, top_k=cfg.experts_per_token,
+                         dropless=dropless)
     return mlp_apply(params["mlp"], x, cfg.mlp_kind), jnp.float32(0.0)
 
 
@@ -96,11 +98,14 @@ def dense_block_apply(params: dict, x: jax.Array, cfg: ArchConfig,
                       positions: jax.Array, *, local: bool = False,
                       kv_cache: Optional[Tuple] = None,
                       return_kv: bool = False,
-                      seq_shard_axis: Optional[str] = None):
+                      seq_shard_axis: Optional[str] = None,
+                      dropless: bool = False):
     """Returns (y, aux_loss, new_kv_or_None).
 
     ``kv_cache = (k, v, kv_positions)`` → decode mode (x is one token).
     ``seq_shard_axis`` — mesh axis name for sequence-sharded decode merge.
+    ``dropless`` — MoE eval dispatch with no capacity dropping (the
+    serving paths pass True so decode matches a drop-free full forward).
     """
     spec = attn_spec(cfg, local)
     h = norm_apply(cfg, params["ln_attn"], x)
@@ -128,7 +133,7 @@ def dense_block_apply(params: dict, x: jax.Array, cfg: ArchConfig,
         attn_out = norm_apply(cfg, params["ln_attn_post"], attn_out)
     x = x + attn_out
     h = norm_apply(cfg, params["ln_mlp"], x)
-    ffn_out, aux = _ffn(params, h, cfg)
+    ffn_out, aux = _ffn(params, h, cfg, dropless=dropless)
     if cfg.post_norm:
         ffn_out = norm_apply(cfg, params["ln_mlp_post"], ffn_out)
     return x + ffn_out, aux, new_kv

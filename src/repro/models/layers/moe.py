@@ -8,6 +8,14 @@ all-to-all under expert-parallel sharding on TPU.
 
 Router load-balance auxiliary loss per Switch Transformers:
 ``aux = E * Σ_e f_e * P_e`` (fraction routed vs mean router prob).
+
+Training uses the capacity path; eval/serving (``dropless=True``) uses a
+drop-free dispatch that honors every token's top-k choice.  Capacity
+dropping is a function of the *batch shape* (``C ∝ T``), so a 1-token
+decode step and a full-sequence forward drop different tokens and their
+logits cannot agree; the drop-free path makes prefill/decode exactly
+consistent with a drop-free full forward (the KV-cache parity property,
+``tests/test_elastic_and_cache.py``).
 """
 
 from __future__ import annotations
@@ -39,8 +47,13 @@ def _capacity(tokens: int, n_experts: int, k: int,
 def moe_apply(params: dict, x: jax.Array, *, top_k: int,
               capacity_factor: float = 1.25,
               chunk_tokens: int = 4096,
+              dropless: bool = False,
               ) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) → (y, aux_loss).
+
+    ``dropless=True`` selects the drop-free eval dispatch
+    (:func:`_moe_dropless`) — exact top-k expert mixing with no capacity
+    limit, used by the prefill/decode serving paths.
 
     Long sequences are processed in *per-sequence* chunks of
     ``chunk_tokens`` with chunk-local capacity:
@@ -54,6 +67,7 @@ def moe_apply(params: dict, x: jax.Array, *, top_k: int,
       all-gathering the full activation tensor (a measured 16 GiB
       replicated f32 buffer — §Perf "moe-per-seq-dispatch").
     """
+    inner = _moe_dropless if dropless else _moe_dense
     b, s, d = x.shape
     if s > chunk_tokens and s % chunk_tokens == 0:
         nc = s // chunk_tokens
@@ -61,15 +75,68 @@ def moe_apply(params: dict, x: jax.Array, *, top_k: int,
 
         def body(_, xi):                       # xi: (B, chunk, d)
             y, aux = jax.vmap(
-                lambda xb: _moe_dense(params, xb[None], top_k=top_k,
-                                      capacity_factor=capacity_factor)
+                lambda xb: inner(params, xb[None], top_k=top_k,
+                                 capacity_factor=capacity_factor)
             )(xi)
             return None, (y[:, 0], aux)
 
         _, (ys, auxs) = jax.lax.scan(body, None, xc)   # ys: (nc, B, c, d)
         return ys.swapaxes(0, 1).reshape(b, s, d), jnp.mean(auxs)
-    return _moe_dense(params, x, top_k=top_k,
-                      capacity_factor=capacity_factor)
+    return inner(params, x, top_k=top_k,
+                 capacity_factor=capacity_factor)
+
+
+def _route(params: dict, xt: jax.Array, top_k: int):
+    """Shared router: (T, D) tokens → (probs, normalized gates, expert ids).
+
+    The gate normalization (mixtral-style: renormalize the chosen top-k)
+    must be identical between the capacity and drop-free paths so the two
+    dispatches differ only in which assignments survive."""
+    dtype = xt.dtype
+    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_idx
+
+
+def _aux_loss(probs: jax.Array, expert_idx: jax.Array) -> jax.Array:
+    """Switch load-balance loss on the top-1 routing fraction."""
+    e = probs.shape[-1]
+    frac_routed = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac_routed * mean_prob)
+
+
+def _moe_dropless(params: dict, x: jax.Array, *, top_k: int,
+                  capacity_factor: float = 0.0
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Drop-free eval dispatch: every top-k assignment is honored.
+
+    Runs every expert over every token and masks the combine with the
+    (T, E) gate matrix — O(E·T·d_ff) compute instead of O(T·k·d_ff), the
+    price of exactness.  Shape-independent: a 1-token decode step and a
+    full forward compute identical per-token outputs, which the capacity
+    path cannot guarantee (``capacity_factor`` is accepted for signature
+    uniformity and ignored).
+    """
+    del capacity_factor
+    dtype = x.dtype
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    xt = x.reshape(b * s, d)
+    probs, gate_vals, expert_idx = _route(params, xt, top_k)
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T, K, E)
+    comb = jnp.einsum("tke,tk->te", onehot, gate_vals)         # (T, E)
+
+    gate = jnp.einsum("td,edf->etf", xt, params["w_gate"].astype(dtype))
+    up = jnp.einsum("td,edf->etf", xt, params["w_up"].astype(dtype))
+    act = jax.nn.silu(gate) * up
+    out = jnp.einsum("etf,efd->etd", act, params["w_down"].astype(dtype))
+    y = jnp.einsum("te,etd->td", comb.astype(dtype), out).reshape(b, s, d)
+    return y, _aux_loss(probs, expert_idx)
 
 
 def _moe_dense(params: dict, x: jax.Array, *, top_k: int,
@@ -80,12 +147,7 @@ def _moe_dense(params: dict, x: jax.Array, *, top_k: int,
     t = b * s
     xt = x.reshape(t, d)
 
-    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
-    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (T, K)
-    # normalize the chosen gates (mixtral-style)
-    gate_vals = gate_vals / jnp.maximum(
-        gate_vals.sum(-1, keepdims=True), 1e-9)
+    probs, gate_vals, expert_idx = _route(params, xt, top_k)
 
     cap = _capacity(t, e, top_k, capacity_factor)
     # position of each (token, k) assignment within its expert's queue
@@ -112,10 +174,4 @@ def _moe_dense(params: dict, x: jax.Array, *, top_k: int,
     expert_out = jnp.einsum("ecf,efd->ecd", act,
                             params["w_down"].astype(dtype))
     y = jnp.einsum("tec,ecd->td", comb, expert_out).reshape(b, s, d)
-
-    # load-balance aux loss (computed on the top-1 routing fraction)
-    frac_routed = jnp.mean(
-        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
-    mean_prob = jnp.mean(probs, axis=0)
-    aux = e * jnp.sum(frac_routed * mean_prob)
-    return y, aux
+    return y, _aux_loss(probs, expert_idx)

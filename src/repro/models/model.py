@@ -163,20 +163,23 @@ def _remat(fn, mode: str):
 
 def element_apply(cfg: ArchConfig, spec: StageSpec, bp: Any, x: jax.Array,
                   positions: jax.Array,
-                  shared: Any = None) -> Tuple[jax.Array, jax.Array]:
+                  shared: Any = None,
+                  dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Apply ONE stage element (= one Cephalo FSDP unit) to ``x``.
 
     Returns (y, aux).  ``shared`` is the zamba2 shared-block params.
+    ``dropless`` selects the MoE drop-free eval dispatch (training keeps
+    the capacity path).
     """
     if spec.kind == "dense":
         y, a, _ = B.dense_block_apply(bp, x, cfg, positions,
-                                      local=spec.local)
+                                      local=spec.local, dropless=dropless)
         return y, a
     if spec.kind == "pair":
         y, a1, _ = B.dense_block_apply(bp["local"], x, cfg, positions,
-                                       local=True)
+                                       local=True, dropless=dropless)
         y, a2, _ = B.dense_block_apply(bp["global"], y, cfg, positions,
-                                       local=False)
+                                       local=False, dropless=dropless)
         return y, a1 + a2
     if spec.kind == "ssm":
         y, _ = B.ssm_block_apply(bp, x, cfg)
@@ -191,18 +194,20 @@ def element_apply(cfg: ArchConfig, spec: StageSpec, bp: Any, x: jax.Array,
             return xc, None
         y, _ = jax.lax.scan(inner, x, bp["mamba"])
         y, a, _ = B.dense_block_apply(shared, y, cfg, positions,
-                                      local=False)
+                                      local=False, dropless=dropless)
         return y, a
     raise ValueError(spec.kind)
 
 
 def _stage_apply_train(cfg: ArchConfig, spec: StageSpec, stage_params: Any,
                        x: jax.Array, positions: jax.Array, aux: jax.Array,
-                       shared: Any, remat: str) -> Tuple[jax.Array, jax.Array]:
+                       shared: Any, remat: str,
+                       dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
     def body(carry, bp):
         x, aux = carry
         x = checkpoint_name(x, "boundary")
-        y, a = element_apply(cfg, spec, bp, x, positions, shared)
+        y, a = element_apply(cfg, spec, bp, x, positions, shared,
+                             dropless=dropless)
         return (y, aux + a), None
 
     (x, aux), _ = jax.lax.scan(_remat(body, remat), (x, aux), stage_params)
@@ -212,8 +217,12 @@ def _stage_apply_train(cfg: ArchConfig, spec: StageSpec, stage_params: Any,
 def forward_hidden(cfg: ArchConfig, params: Dict[str, Any],
                    tokens: jax.Array,
                    frontend_embed: Optional[jax.Array] = None,
-                   remat: str = "full") -> Tuple[jax.Array, jax.Array]:
-    """Full-sequence forward.  Returns (hidden, aux_loss)."""
+                   remat: str = "full",
+                   dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (hidden, aux_loss).
+
+    ``dropless=True`` is the eval-reference mode: MoE layers use the
+    drop-free dispatch, making the result comparable to prefill/decode."""
     bsz, seq = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None],
                                  (bsz, seq))
@@ -221,7 +230,8 @@ def forward_hidden(cfg: ArchConfig, params: Dict[str, Any],
     aux = jnp.float32(0.0)
     for spec, sp in zip(build_stages(cfg), params["stages"]):
         x, aux = _stage_apply_train(cfg, spec, sp, x, positions, aux,
-                                    params.get("shared"), remat)
+                                    params.get("shared"), remat,
+                                    dropless=dropless)
     return x, aux
 
 
@@ -338,7 +348,8 @@ def prefill(cfg: ArchConfig, params: Dict[str, Any], tokens: jax.Array,
 
             def body(xc, bp, _cl=cl, _local=spec.local):
                 y, _, kv = B.dense_block_apply(bp, xc, cfg, positions,
-                                               local=_local, return_kv=True)
+                                               local=_local, return_kv=True,
+                                               dropless=True)
                 c = KV.fill_kv_from_prefill(
                     kv[0], kv[1], positions, _cl,
                     window=B.attn_spec(cfg, _local).window)
@@ -353,10 +364,12 @@ def prefill(cfg: ArchConfig, params: Dict[str, Any], tokens: jax.Array,
             def body(xc, bp):
                 y, _, kvl = B.dense_block_apply(bp["local"], xc, cfg,
                                                 positions, local=True,
-                                                return_kv=True)
+                                                return_kv=True,
+                                                dropless=True)
                 y, _, kvg = B.dense_block_apply(bp["global"], y, cfg,
                                                 positions, local=False,
-                                                return_kv=True)
+                                                return_kv=True,
+                                                dropless=True)
                 cl_ = KV.fill_kv_from_prefill(kvl[0], kvl[1], positions,
                                               cl_l, window=cfg.window)
                 cg_ = KV.fill_kv_from_prefill(kvg[0], kvg[1], positions,
@@ -381,7 +394,8 @@ def prefill(cfg: ArchConfig, params: Dict[str, Any], tokens: jax.Array,
                 xc, states = jax.lax.scan(inner, xc, bp["mamba"])
                 xc, _, kv = B.dense_block_apply(params["shared"], xc, cfg,
                                                 positions, local=False,
-                                                return_kv=True)
+                                                return_kv=True,
+                                                dropless=True)
                 c = KV.fill_kv_from_prefill(kv[0], kv[1], positions, cl,
                                             window=0)
                 return xc, {"h": states[0], "conv": states[1], "attn": c}
@@ -421,7 +435,8 @@ def decode_step(cfg: ArchConfig, params: Dict[str, Any],
             cache_total=total, shard_start=shard_start)
         y, _, _ = B.dense_block_apply(
             bp, xc, cfg, positions, local=local,
-            kv_cache=(kc, vc, pos_arr), seq_shard_axis=seq_shard_axis)
+            kv_cache=(kc, vc, pos_arr), seq_shard_axis=seq_shard_axis,
+            dropless=True)
         return y, {"k": kc, "v": vc, "pos": pos_arr}
 
     def group_total(cache, key):

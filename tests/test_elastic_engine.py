@@ -1,0 +1,275 @@
+"""Elastic replanning runtime tests (ISSUE 2 tentpole).
+
+Three layers:
+
+* **migration parity** — live state migration between plans must be pure
+  data movement: params, Adam moments, and the step counter match a
+  from-scratch resharding of the new plan *exactly* (not approximately),
+  on the loopback substrate here and on shard_map (+ cross-substrate) in
+  the subprocess integration test;
+* **control loop** — an injected straggler must trigger a replan whose
+  refitted cost model reflects the degradation and whose adopted plan
+  recovers to within 10% of the fresh-plan optimum (the acceptance
+  gate), while a healthy cluster must never churn;
+* **rank-set changes** — a rank leaving mid-run migrates state onto a
+  smaller cluster's plan without losing the carried optimizer moments.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import device_specs as D
+from repro.core.cost_model import analytic_cluster_model
+from repro.core.engine import build_train_step, migrate_state
+from repro.core.engine.elastic import (CostModelOracle, ElasticConfig,
+                                       ElasticEngine, PROBE_MS)
+from repro.core.model_stats import build_model_stats
+from repro.core.partition import Plan, RankPlan
+from repro.core.planner import auto_solve, evaluate_plan
+from repro.core.profiler import refit_cluster_model
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+
+def _tree_max_err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(jnp.asarray(x, jnp.float32) -
+                                   jnp.asarray(y, jnp.float32)).max()),
+        a, b)))
+
+
+def _plan(ranks_spec, batch):
+    ranks = [RankPlan(i, d, m=m, ell=ell, state_ratio=r)
+             for i, (d, m, ell, r) in enumerate(ranks_spec)]
+    return Plan(model="toy", cluster="toy", global_batch=batch, ranks=ranks)
+
+
+def _mini_cm(cfg, seq):
+    cluster = D.Cluster([D.L4, D.A6000, D.P40, D.P100], 50, "mini")
+    return analytic_cluster_model(cluster, build_model_stats(cfg, seq))
+
+
+# --- migration parity (loopback) ---------------------------------------------
+
+def test_loopback_migration_matches_from_scratch_reshard():
+    """After real training steps (non-zero Adam moments), migration to a
+    plan with different ratios AND different rank count must equal a
+    from-scratch resharding of the gathered state — exactly."""
+    cfg = get_arch("tiny-llama").reduced()
+    seq = 16
+    plan_a = _plan([("A", 2, 2, 0.5), ("B", 3, 1, 0.25), ("C", 1, 2, 0.25)],
+                   batch=9)
+    plan_b = _plan([("A", 3, 2, 0.7), ("B", 3, 1, 0.3)], batch=9)
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=2))
+
+    eng_a = build_train_step(cfg, plan_a, substrate="loopback",
+                             adam=AdamConfig(lr=1e-3), seq_len=seq)
+    state = eng_a.init_state(jax.random.PRNGKey(0))
+    for step in range(2):
+        state, _ = eng_a.step(state, stream.sample(step, 9))
+
+    eng_b = build_train_step(cfg, plan_b, substrate="loopback",
+                             adam=AdamConfig(lr=1e-3), seq_len=seq)
+    state_b = migrate_state(eng_a, state, eng_b)
+
+    exported = eng_a.export_state(state)
+    assert exported["step"] == 2
+    # moments must be non-trivial or the parity below is vacuous
+    assert max(float(jnp.abs(x).max())
+               for x in jax.tree.leaves(exported["m"])) > 0
+
+    # (1) roundtrip through the new plan's layouts is exact
+    back = eng_b.export_state(state_b)
+    assert back["step"] == 2
+    for part in ("p", "m", "v"):
+        assert _tree_max_err(exported[part], back[part]) == 0.0, part
+
+    # (2) per-rank shard buffers equal a from-scratch reshard of the
+    # gathered trees through the substrate's own layout path
+    scratch = eng_b.trainer.substrate.shard_state(
+        exported["p"], exported["m"], exported["v"])
+    for r in range(plan_b.n):
+        for g in eng_b.trainer.groups:
+            for part in ("p", "m", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(state_b[r][g.name][part]),
+                    np.asarray(scratch[r][g.name][part]))
+
+    # (3) training continues with the same global step math (Eq. 1)
+    big = stream.sample(2, 9)
+    _, loss_b = eng_b.step(state_b, big)
+    _, loss_a = eng_a.step(state, big)
+    assert abs(loss_b - loss_a) < 1e-3
+
+
+# --- control loop -------------------------------------------------------------
+
+def _elastic_engine(cfg, cm, batch, seq, **ecfg_kw):
+    oracle = CostModelOracle(cm)
+    plan = auto_solve(cm, batch)
+    assert plan.feasible
+    eng = build_train_step(
+        cfg, plan, substrate="loopback", adam=AdamConfig(lr=1e-3),
+        seq_len=seq, cost_model=cm, oracle=oracle,
+        elastic=ElasticConfig(warmup_steps=1, min_steps_between_replans=1,
+                              **ecfg_kw))
+    assert isinstance(eng, ElasticEngine)
+    return eng, oracle, plan
+
+
+def test_straggler_triggers_replan_and_recovers():
+    cfg = get_arch("tiny-llama").reduced()
+    seq, batch = 32, 48
+    cm = _mini_cm(cfg, seq)
+    eng, oracle, plan0 = _elastic_engine(cfg, cm, batch, seq)
+    straggler = max(plan0.ranks, key=lambda r: r.b).rank
+    factor = 3.0
+
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=3))
+    state = eng.init_state(jax.random.PRNGKey(0))
+    for step in range(2):
+        state, loss = eng.step(state, stream.sample(step, batch))
+    assert not eng.events, "healthy cluster must not replan"
+    oracle.degrade(straggler, factor)
+    for step in range(2, 7):
+        state, loss = eng.step(state, stream.sample(step, batch))
+    assert np.isfinite(loss)
+
+    adopted = [ev for ev in eng.events if ev.adopted]
+    assert adopted, "straggler must trigger an adopted replan"
+    assert eng.plan is not plan0
+
+    # the refitted model reflects the degradation
+    base = cm.per_rank[straggler].t_fwd.one(4)
+    refit = eng.cm.per_rank[straggler].t_fwd.one(4)
+    assert refit == pytest.approx(base * factor, rel=1e-6)
+
+    # the new plan sheds load off the straggler
+    old_b = plan0.ranks[straggler].b
+    assert eng.plan.ranks[straggler].b < old_b
+
+    # acceptance gate: within 10% of the fresh-plan optimum under the
+    # true degraded model (refit == truth here: the oracle was probed
+    # post-degradation on the same grid)
+    grid = [m for m in PROBE_MS if m <= batch]
+    true_cm = refit_cluster_model(
+        cm,
+        [[(m, oracle(r, m, "fwd")) for m in grid] for r in range(cm.cluster.n)],
+        [[(m, oracle(r, m, "bwd")) for m in grid] for r in range(cm.cluster.n)])
+    fresh = auto_solve(true_cm, batch)
+    post = evaluate_plan(true_cm, eng.plan)
+    assert post["throughput"] >= 0.9 * fresh.predicted_throughput
+
+    # the migrated step counter survived every replan
+    assert eng.export_state(state)["step"] == 7
+
+
+def test_healthy_cluster_never_churns():
+    cfg = get_arch("tiny-llama").reduced()
+    seq, batch = 16, 12
+    cm = _mini_cm(cfg, seq)
+    eng, _, _ = _elastic_engine(cfg, cm, batch, seq)
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=4))
+    state = eng.init_state(jax.random.PRNGKey(0))
+    for step in range(5):
+        state, _ = eng.step(state, stream.sample(step, batch))
+    assert eng.events == []
+
+
+def test_rank_departure_migrates_state():
+    """A rank leaves: plan re-solves on the smaller cluster and the
+    carried params are bit-identical through the migration."""
+    cfg = get_arch("tiny-llama").reduced()
+    seq, batch = 16, 12
+    cm4 = _mini_cm(cfg, seq)
+    eng, _, _ = _elastic_engine(cfg, cm4, batch, seq)
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=5))
+    state = eng.init_state(jax.random.PRNGKey(0))
+    for step in range(2):
+        state, _ = eng.step(state, stream.sample(step, batch))
+    before = eng.export_state(state)
+
+    c3 = D.Cluster([D.L4, D.A6000, D.P40], 50, "mini3")
+    cm3 = analytic_cluster_model(c3, build_model_stats(cfg, seq))
+    state = eng.on_cluster_change(cm3, state)
+    assert eng.plan.n == 3
+    after = eng.export_state(state)
+    assert after["step"] == before["step"]
+    for part in ("p", "m", "v"):
+        assert _tree_max_err(before[part], after[part]) == 0.0, part
+
+    state, loss = eng.step(state, stream.sample(2, batch))
+    assert np.isfinite(loss)
+    assert eng.events[-1].reason == "cluster change"
+
+
+# --- shard_map / cross-substrate parity (subprocess) --------------------------
+
+@pytest.mark.integration
+def test_spmd_migration_parity(subproc):
+    """Migration on the shard_map substrate and across substrates: the
+    exported (p, m, v, step) roundtrips exactly and the continued step
+    matches the loopback continuation."""
+    out = subproc("""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.configs.base import get_arch
+from repro.core.engine import build_train_step, migrate_state
+from repro.core.partition import Plan, RankPlan
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+cfg = get_arch("tiny-llama").reduced()
+seq = 16
+def mk(specs, batch):
+    return Plan(model="toy", cluster="toy", global_batch=batch,
+                ranks=[RankPlan(i, d, m=m, ell=ell, state_ratio=r)
+                       for i, (d, m, ell, r) in enumerate(specs)])
+plan_a = mk([("A",2,2,0.5),("B",3,1,0.25),("C",1,2,0.125),("D",1,1,0.125)], 10)
+plan_b = mk([("A",3,2,0.1),("B",2,1,0.4),("C",1,1,0.4),("D",1,1,0.1)], 10)
+stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=5))
+
+eng_a = build_train_step(cfg, plan_a, substrate="shard_map",
+                         adam=AdamConfig(lr=1e-3), seq_len=seq)
+state = eng_a.init_state(jax.random.PRNGKey(0))
+for step in range(2):
+    state, _ = eng_a.step(state, stream.sample(step, 10))
+exported = eng_a.export_state(state)
+assert exported["step"] == 2
+assert max(float(jnp.abs(x).max())
+           for x in jax.tree.leaves(exported["m"])) > 0
+
+def err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(jnp.asarray(x, jnp.float32) -
+                                   jnp.asarray(y, jnp.float32)).max()),
+        a, b)))
+
+# shard_map -> shard_map with different uneven ratios
+eng_b = build_train_step(cfg, plan_b, substrate="shard_map",
+                         adam=AdamConfig(lr=1e-3), seq_len=seq)
+state_b = migrate_state(eng_a, state, eng_b)
+back = eng_b.export_state(state_b)
+assert back["step"] == 2
+for part in ("p", "m", "v"):
+    assert err(exported[part], back[part]) == 0.0, part
+print("spmd->spmd exact")
+
+# shard_map -> loopback (cross-substrate)
+eng_l = build_train_step(cfg, plan_b, substrate="loopback",
+                         adam=AdamConfig(lr=1e-3), seq_len=seq)
+state_l = migrate_state(eng_a, state, eng_l)
+for part in ("p", "m", "v"):
+    assert err(exported[part], eng_l.export_state(state_l)[part]) == 0.0, part
+
+big = stream.sample(2, 10)
+_, loss_b = eng_b.step(state_b, big)
+_, loss_l = eng_l.step(state_l, big)
+assert abs(loss_b - loss_l) < 1e-4, (loss_b, loss_l)
+print("cross-substrate continuation parity", abs(loss_b - loss_l))
+print("ALL-OK")
+""", n_devices=4, timeout=1800)
+    assert "ALL-OK" in out

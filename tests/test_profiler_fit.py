@@ -1,0 +1,105 @@
+"""Profiler fit→predict roundtrip (paper Sec. 2.3 / 3.1, ISSUE 2).
+
+``fit_piecewise`` is the one fitting path shared by the offline profiler
+and the elastic runtime's telemetry refit; these tests pin down that
+
+* known linear latency data recovers slope/intercept and extrapolates,
+* the table region interpolates the measured samples exactly,
+* ``refit_cluster_model`` on degraded telemetry yields a model whose
+  predictions scale by the degradation factor and that the planner
+  accepts (feasible plan, invariants hold).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core import device_specs as D
+from repro.core.cost_model import analytic_cluster_model, fit_piecewise
+from repro.core.model_stats import build_model_stats
+from repro.core.planner import auto_solve
+from repro.core.profiler import refit_cluster_model
+
+
+def test_fit_piecewise_recovers_linear_coeffs():
+    t0, t1 = 2e-4, 5e-4
+    ms = [1, 2, 3, 4, 6, 8, 12, 16]
+    model = fit_piecewise([(m, t0 + t1 * m) for m in ms])
+    c0, c1 = model.linear_coeffs
+    assert c0 == pytest.approx(t0, rel=1e-6)
+    assert c1 == pytest.approx(t1, rel=1e-6)
+    # extrapolation beyond the table uses the fitted tail
+    for m in (32, 64, 100):
+        assert model.one(m) == pytest.approx(t0 + t1 * m, rel=1e-6)
+    # ell microbatches scale linearly
+    assert model(8, ell=3) == pytest.approx(3 * model.one(8), rel=1e-12)
+
+
+def test_fit_piecewise_interpolates_measured_table():
+    samples = [(1, 3e-4), (2, 4.5e-4), (4, 9e-4), (8, 2e-3)]
+    model = fit_piecewise(samples)
+    for m, t in samples:
+        assert model.one(m) == pytest.approx(t, rel=1e-9)
+    # between-samples: monotone interpolation inside the table
+    assert samples[1][1] < model.one(3) < samples[2][1]
+
+
+def _mini_cm(seq=32):
+    cfg = get_arch("tiny-llama").reduced()
+    cluster = D.Cluster([D.L4, D.A6000, D.P40, D.P100], 50, "mini")
+    return cfg, analytic_cluster_model(cluster, build_model_stats(cfg, seq))
+
+
+def test_refit_from_telemetry_scales_and_planner_accepts():
+    _, cm = _mini_cm()
+    factor = 2.0
+    straggler = 1
+    grid = [1, 2, 3, 4, 6, 8]
+
+    def fwd(r, m):
+        t = cm.per_rank[r].t_fwd.one(m)
+        return t * factor if r == straggler else t
+
+    def bwd(r, m):
+        t = cm.per_rank[r].t_bwd.one(m)
+        return t * factor if r == straggler else t
+
+    refit = refit_cluster_model(
+        cm,
+        [[(m, fwd(r, m)) for m in grid] for r in range(cm.cluster.n)],
+        [[(m, bwd(r, m)) for m in grid] for r in range(cm.cluster.n)])
+
+    # refit-from-telemetry reproduces the degradation across the m range,
+    # including extrapolation past the probe grid
+    for m in (1, 4, 8, 16, 32):
+        got = refit.per_rank[straggler].t_fwd.one(m)
+        want = cm.per_rank[straggler].t_fwd.one(m) * factor
+        assert got == pytest.approx(want, rel=1e-3), m
+        untouched = refit.per_rank[0].t_bwd.one(m)
+        assert untouched == pytest.approx(cm.per_rank[0].t_bwd.one(m),
+                                          rel=1e-3), m
+
+    # the planner accepts the refitted model: feasible plan, invariants
+    # hold, and the degraded rank gets no more batch than before
+    plan_before = auto_solve(cm, 48)
+    plan_after = auto_solve(refit, 48)
+    assert plan_after.feasible, plan_after.infeasible_reason
+    plan_after.check()
+    assert plan_after.ranks[straggler].b <= plan_before.ranks[straggler].b
+    # a 2x-slower bottleneck can't predict a faster iteration
+    assert plan_after.predicted_iter_s >= plan_before.predicted_iter_s - 1e-9
+
+
+def test_refit_keeps_old_model_on_sparse_telemetry():
+    """Ranks with < min_samples points must keep their previous models
+    (a partial window never degrades the planner's inputs)."""
+    _, cm = _mini_cm()
+    n = cm.cluster.n
+    one_sample = [[(4, 1.0)]] + [[] for _ in range(n - 1)]
+    refit = refit_cluster_model(cm, one_sample, one_sample, min_samples=2)
+    for r in range(n):
+        assert refit.per_rank[r].t_fwd is cm.per_rank[r].t_fwd
+        assert refit.per_rank[r].t_bwd is cm.per_rank[r].t_bwd
+    # memory/head/comm always carry over
+    assert refit.per_rank[0].memory is cm.per_rank[0].memory
+    assert refit.comm is cm.comm

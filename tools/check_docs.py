@@ -1,0 +1,117 @@
+"""Lightweight documentation checks (CI gate).
+
+Two checks, zero dependencies:
+
+1. **Docstring audit** — every public module under ``src/repro/core``
+   and ``src/repro/core/engine`` must have a module docstring that
+   states its paper-section mapping (a ``Sec.`` / ``Eq.`` / ``Fig.`` /
+   ``Alg.`` / ``App.`` / ``Table`` / ``§`` / "paper" reference), so a
+   reader can always get from code to the claim it implements.
+2. **Markdown link check** — every relative link in README.md,
+   DESIGN.md, ROADMAP.md and docs/*.md must resolve to an existing
+   file (anchors and external URLs are skipped).
+
+Exit status is nonzero on any failure; run as
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: directories whose public modules must carry a paper-section mapping
+DOCSTRING_DIRS = [
+    os.path.join("src", "repro", "core"),
+    os.path.join("src", "repro", "core", "engine"),
+]
+
+#: markdown files whose relative links must resolve
+MARKDOWN = ["README.md", "DESIGN.md", "ROADMAP.md"]
+MARKDOWN_DIRS = ["docs"]
+
+PAPER_REF = re.compile(
+    r"(Sec\.|Eq\.|Fig\.|Alg\.|App\.|Table\s|§|paper)", re.IGNORECASE)
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_docstrings() -> list:
+    errors = []
+    for rel in DOCSTRING_DIRS:
+        root = os.path.join(REPO, rel)
+        for name in sorted(os.listdir(root)):
+            if not name.endswith(".py") or name.startswith("_"):
+                if name != "__init__.py":
+                    continue
+            path = os.path.join(root, name)
+            if not os.path.isfile(path):
+                continue
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+            doc = ast.get_docstring(tree)
+            relpath = os.path.relpath(path, REPO)
+            if not doc:
+                errors.append(f"{relpath}: missing module docstring")
+            elif not PAPER_REF.search(doc):
+                errors.append(
+                    f"{relpath}: module docstring states no paper-section "
+                    f"mapping (need one of Sec./Eq./Fig./Alg./App./Table/§/"
+                    f"'paper')")
+    return errors
+
+
+def _markdown_files() -> list:
+    files = [os.path.join(REPO, m) for m in MARKDOWN]
+    for d in MARKDOWN_DIRS:
+        droot = os.path.join(REPO, d)
+        if os.path.isdir(droot):
+            files += [os.path.join(droot, f)
+                      for f in sorted(os.listdir(droot))
+                      if f.endswith(".md")]
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_links() -> list:
+    errors = []
+    for path in _markdown_files():
+        base = os.path.dirname(path)
+        relpath = os.path.relpath(path, REPO)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # strip fenced code blocks — links in examples aren't navigation
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#")[0]
+            if not target:
+                continue
+            if not os.path.exists(os.path.normpath(
+                    os.path.join(base, target))):
+                errors.append(f"{relpath}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check_docstrings() + check_links()
+    if errors:
+        print(f"doc check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_mods = sum(
+        len([f for f in os.listdir(os.path.join(REPO, d))
+             if f.endswith(".py")]) for d in DOCSTRING_DIRS)
+    print(f"doc check OK: {n_mods} module docstrings carry paper mappings, "
+          f"{len(_markdown_files())} markdown files link-checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
