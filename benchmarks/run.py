@@ -58,9 +58,14 @@ def main() -> None:
          lambda rows: f"recovery_ratio={next(r['ratio'] for r in rows if r['scenario'] == 'recovery_ratio')}"),
     ]
     if not args.fast:
+        from benchmarks import multiproc_throughput
         sections += [
             ("table5_cluster_b", T.table5_cluster_b,
              lambda rows: f"rows={len(rows)}"),
+            ("multiproc_throughput", multiproc_throughput.rows,
+             lambda rows: "parity_err=" + str(next(
+                 r["max_abs_err"] for r in rows
+                 if r["substrate"] == "parity"))),
             ("fig8_measured_hlo", grad_accum.measured_collective_bytes,
              lambda rows: f"rs_ratio={rows[-1].get('reducescatter_count', '?')}"),
             ("appc_measured_hlo", uneven_overhead.measured_hlo_overhead,

@@ -20,8 +20,14 @@ for them (DESIGN.md §Engine):
 * :mod:`repro.core.engine.substrate` — **CollectiveSubstrate**: how
   AllGather / ReduceScatter are actually performed — in-graph ``lax``
   collectives under ``shard_map`` vs. host loopback gather/scatter for
-  the MPMD process model.  A future multi-process (or pipeline) substrate
-  implements the same surface and slots in without touching schedules.
+  the MPMD process model.  New substrates implement the same surface
+  and slot in without touching schedules.
+* :mod:`repro.core.engine.multiproc` — **MultiProcessSubstrate /
+  ProcessEngine**: the loopback surface across real OS process
+  boundaries (one spawned worker per rank, AllGatherv/ReduceScatterv
+  over :mod:`repro.core.engine.transport`), plus **WallClockOracle**,
+  the real-measurement telemetry source for the elastic loop
+  (docs/multiproc.md).
 * :mod:`repro.core.engine.api` — ``build_train_step(cfg, plan,
   schedule=..., substrate=...)``: one entry point that returns a uniform
   ``TrainEngine`` (init_state / step / gather_params) on either
@@ -38,6 +44,8 @@ from repro.core.engine.api import (MpmdEngine, SpmdEngine, TrainEngine,
 from repro.core.engine.elastic import (CostModelOracle, ElasticConfig,
                                        ElasticEngine, TelemetryBuffer,
                                        migrate_state)
+from repro.core.engine.multiproc import (MultiProcessSubstrate,
+                                         ProcessEngine, WallClockOracle)
 from repro.core.engine.schedules import (Schedule, chunked, get_schedule,
                                          list_schedules, register_schedule)
 from repro.core.engine.substrate import (CollectiveSubstrate,
@@ -48,11 +56,13 @@ from repro.core.engine.units import (UnitGroup, UnitPlanner, element_tree,
 
 __all__ = [
     "CollectiveSubstrate", "CostModelOracle", "ElasticConfig",
-    "ElasticEngine", "LoopbackSubstrate", "MpmdEngine", "Schedule",
+    "ElasticEngine", "LoopbackSubstrate", "MpmdEngine",
+    "MultiProcessSubstrate", "ProcessEngine", "Schedule",
     "ShardMapSubstrate", "SpmdEngine", "TelemetryBuffer", "TrainEngine",
-    "UnitGroup", "UnitPlanner", "build_train_step", "chunked",
-    "element_tree", "get_schedule", "homogeneous_plan", "list_schedules",
-    "merge_params", "migrate_state", "register_schedule", "split_params",
+    "UnitGroup", "UnitPlanner", "WallClockOracle", "build_train_step",
+    "chunked", "element_tree", "get_schedule", "homogeneous_plan",
+    "list_schedules", "merge_params", "migrate_state",
+    "register_schedule", "split_params",
     # lazy re-exports (PEP 562): "CephaloProgram", "HeteroTrainer"
 ]
 

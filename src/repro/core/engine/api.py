@@ -19,6 +19,12 @@ identical (Eq. 1), which `tests/test_engine.py` asserts numerically.
 * ``substrate="loopback"`` — the MPMD runtime: per-rank programs with
   unpadded ``(ell_i, m_i)`` shapes and software loopback collectives;
   runs on a single device.
+* ``substrate="multiproc"`` — the MPMD runtime across real OS process
+  boundaries: one worker process per rank, host-coordinated AllGatherv /
+  ReduceScatterv (:mod:`repro.core.engine.multiproc`), numerically
+  matching loopback step for step.  Engines on this substrate own worker
+  fleets — call :meth:`TrainEngine.close` (or use the engine as a
+  context manager) when done.
 """
 
 from __future__ import annotations
@@ -34,7 +40,7 @@ from repro.core.engine.schedules import Schedule, get_schedule
 from repro.core.partition import Plan, RankPlan
 from repro.optim.adam import AdamConfig
 
-SUBSTRATES = ("shard_map", "loopback")
+SUBSTRATES = ("shard_map", "loopback", "multiproc")
 
 
 def homogeneous_plan(n: int, ell: int, m: int,
@@ -79,6 +85,17 @@ class TrainEngine(abc.ABC):
         """Lay an :meth:`export_state` payload out on THIS engine's plan:
         params and Adam moments land on the new shard layouts, the step
         counter carries over.  The import half of elastic migration."""
+
+    def close(self) -> None:
+        """Release engine-held resources (worker processes, shared
+        memory).  No-op for in-process substrates; the multiproc
+        substrate shuts its rank fleet down here.  Idempotent."""
+
+    def __enter__(self) -> "TrainEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class SpmdEngine(TrainEngine):
@@ -228,5 +245,8 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
             raise ValueError(
                 f"loopback substrate takes no extra knobs, got {knobs}")
         return MpmdEngine(cfg, plan, sched, adam, seq_len)
+    if substrate == "multiproc":
+        from repro.core.engine.multiproc import ProcessEngine
+        return ProcessEngine(cfg, plan, sched, adam, seq_len, **knobs)
     raise ValueError(f"unknown substrate {substrate!r}; "
                      f"choose from {SUBSTRATES}")

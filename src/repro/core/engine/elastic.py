@@ -98,6 +98,9 @@ class CostModelOracle:
         self.factors.pop(rank, None)
 
     def __call__(self, rank: int, m: int, phase: str) -> float:
+        if phase not in ("fwd", "bwd"):
+            raise ValueError(
+                f"unknown phase {phase!r}; expected 'fwd' or 'bwd'")
         dc = self.cm.per_rank[rank]
         model = dc.t_fwd if phase == "fwd" else dc.t_bwd
         return model.one(m) * self.factors.get(rank, 1.0)
@@ -212,6 +215,10 @@ class ElasticEngine(TrainEngine):
                         seq_len=seq_len, mesh=mesh, **knobs)
         self.engine = build_train_step(cfg, plan, **self._mk)
         self.schedule = self.engine.schedule
+        # measurement oracles that talk to live workers (WallClockOracle)
+        # attach to the concrete inner engine, here and after every rebuild
+        if hasattr(self.oracle, "bind"):
+            self.oracle.bind(self.engine)
         self.telemetry = TelemetryBuffer(plan.n, elastic.telemetry_window)
         self.step_count = 0
         self.steps_since_replan = 0
@@ -235,6 +242,9 @@ class ElasticEngine(TrainEngine):
 
     def simulated_iteration_seconds(self) -> Dict[str, float]:
         return self.engine.simulated_iteration_seconds()
+
+    def close(self) -> None:
+        self.engine.close()
 
     # --- the control loop ---------------------------------------------------
     def step(self, state: Any, big: np.ndarray) -> Tuple[Any, float]:
@@ -305,9 +315,15 @@ class ElasticEngine(TrainEngine):
                  state: Any) -> Any:
         new_engine = build_train_step(self.cfg, new_plan, **self._mk)
         state = migrate_state(self.engine, state, new_engine)
+        self.engine.close()     # release the old plan's worker fleet
         self.engine = new_engine
         self.plan = new_plan
         self.cm = new_cm
+        if hasattr(self.oracle, "bind"):
+            # re-aim a live-measurement oracle (WallClockOracle) at the
+            # new fleet; it re-applies any injected slowdowns so a slow
+            # *machine* stays slow across a replan.
+            self.oracle.bind(new_engine)
         self.telemetry = TelemetryBuffer(new_plan.n,
                                          self.elastic.telemetry_window)
         self.steps_since_replan = 0

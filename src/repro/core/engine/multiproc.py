@@ -1,0 +1,722 @@
+"""Multi-process MPMD substrate: one OS process per rank.
+
+The loopback runtime (:mod:`repro.core.hetero_trainer`) reproduces the
+paper's MPMD execution model — per-rank programs with unpadded
+``(ell_i, m_i)`` shapes, one state shard per rank (Sec. 2), collective
+rounds from the GA schedule (Fig. 4) — but simulates the fleet inside a
+single process.  This module runs the *same* step across real process
+boundaries:
+
+* **ProcessEngine** — a :class:`~repro.core.engine.api.TrainEngine`
+  whose per-rank programs run in ``plan.n`` spawned worker processes.
+  Each worker owns its rank's ragged state shard (physical memory
+  ∝ r_i, the paper's memory-balancing claim, now per *process*), builds
+  its own jit programs, and applies Adam locally (ZeRO-3).
+* **MultiProcessSubstrate** — the ``LoopbackSubstrate`` surface with a
+  real data plane: AllGatherv collects every worker's ragged shard
+  slices and reassembles full flat unit buffers; ReduceScatterv sums
+  the workers' full gradient buffers (fixed rank order, so the float
+  accumulation is bit-identical to loopback's) and returns each rank
+  its slice.  Bytes move over :mod:`repro.core.engine.transport`
+  (shared-memory arenas or the socket pair).
+* **WallClockOracle** — the real-measurement latency source the elastic
+  runtime (:mod:`repro.core.engine.elastic`) was designed to plug in:
+  passive queries are answered from each worker's measured fwd/bwd step
+  timings, active probe queries run a timed single-layer pass (the
+  paper's Sec. 3.1 profile, live) *inside* the worker.  Straggler
+  injection (:meth:`WallClockOracle.degrade`) makes the worker process
+  actually slower — it sleeps proportionally to its compute — so the
+  telemetry → refit → replan → migrate loop runs end-to-end on real
+  wall-clock, not on a cost-model multiplier.
+
+Schedules are walked entirely on the coordinator (workers only see
+"microbatches [lo, hi) now"), so every registered GA schedule runs
+unchanged across process boundaries; the cross-substrate parity test
+asserts params + Adam moments match loopback after N steps.
+
+On a real multi-node fleet the spawned workers become one JAX process
+per GPU; pass ``jax_coordinator="host:port"`` to let each worker attempt
+``jax.distributed.initialize`` (best-effort, ignored when the backend
+lacks multi-process support — e.g. this CPU container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.engine.api import TrainEngine
+from repro.core.engine.schedules import Schedule
+from repro.core.engine.substrate import LoopbackSubstrate
+from repro.core.engine.transport import Channel, resolve_transport
+from repro.core.engine.units import UnitPlanner, normalized_ratios
+from repro.core.partition import Plan
+from repro.optim.adam import AdamConfig, adam_update
+
+#: default seconds to wait for a worker reply before declaring it hung.
+#: first replies include jax import + jit compile, so this is generous.
+REPLY_TIMEOUT = 600.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """Everything one worker needs to build its rank's program.
+
+    Must stay picklable under the ``spawn`` start method: plain data
+    only (the GA schedule deliberately stays coordinator-side — its
+    ``chunk_fn`` lambda would not pickle, and workers never need it).
+    """
+
+    rank: int
+    cfg: ArchConfig
+    ratios: Tuple[float, ...]
+    m: int
+    ell: int
+    seq: int
+    adam: AdamConfig
+    transport: str
+    n_ranks: int
+    jax_coordinator: Optional[str] = None
+
+
+# ---------------------------------------------------------------------------
+# Worker side
+# ---------------------------------------------------------------------------
+
+class _Worker:
+    """Per-process rank runtime: state shard + jit programs + timers."""
+
+    def __init__(self, spec: WorkerSpec):
+        self.spec = spec
+        self.sub = LoopbackSubstrate(UnitPlanner(spec.cfg,
+                                                 list(spec.ratios)))
+        self.state: Dict[str, Dict[str, np.ndarray]] = {}
+        self.grad_acc: Optional[Dict[str, np.ndarray]] = None
+        self.tokens: Optional[np.ndarray] = None
+        self.labels: Optional[np.ndarray] = None
+        self.w_val = 0.0
+        self.slowdown = 1.0
+        self._grad_fn = None
+        self._compiled_rows: set = set()
+        self._probe_cache: Dict[Tuple[str, int], Callable] = {}
+        self._probe_params = None
+
+    # --- state ----------------------------------------------------------
+    def scatter_state(self, arrays: Dict[str, np.ndarray]) -> None:
+        for key, arr in arrays.items():
+            unit, part = key.rsplit("|", 1)
+            self.state.setdefault(unit, {})[part] = np.asarray(arr)
+
+    def get_state(self, parts: Sequence[str]) -> Dict[str, np.ndarray]:
+        return {f"{u}|{p}": self.state[u][p]
+                for u in self.state for p in parts}
+
+    def state_nbytes(self) -> int:
+        return sum(a.nbytes for u in self.state.values()
+                   for a in u.values())
+
+    # --- programs -------------------------------------------------------
+    def _fns(self):
+        if self._grad_fn is None:
+            from repro.models import model as M
+            cfg = self.spec.cfg
+
+            def loss(p, tokens, labels, weights):
+                l, _ = M.loss_fn(cfg, p, {"tokens": tokens,
+                                          "labels": labels,
+                                          "weights": weights})
+                return l
+
+            self._grad_fn = jax.jit(jax.value_and_grad(loss))
+        return self._grad_fn
+
+    def begin_step(self, meta: dict, arrays: Dict[str, np.ndarray]) -> None:
+        self.tokens = np.asarray(arrays["tokens"])
+        self.labels = np.asarray(arrays["labels"])
+        self.w_val = float(meta["w_val"])
+        self.grad_acc = None
+
+    def round(self, lo: int, hi: int,
+              flats: Dict[str, np.ndarray]) -> Tuple[dict, dict]:
+        """Fwd+bwd over microbatch indices [lo, hi) ∩ [0, ell).
+
+        Returns (meta, grad flats): meta carries the loss contribution
+        and the measured fwd+bwd wall-clock seconds (inflated — and the
+        process actually slept — under an injected slowdown).  The
+        fwd/bwd *split* telemetry comes from the cheap single-layer
+        probes at step end, not from timing the hot path twice.
+        """
+        ell, m = self.spec.ell, self.spec.m
+        lo, hi = min(lo, ell), min(hi, ell)
+        if hi <= lo or m == 0:
+            return {"loss": 0.0, "n_mb": 0, "t_wall": 0.0}, {}
+        params = self.sub.unflatten_flats(flats)
+        rows = slice(lo * m, hi * m)
+        tok = jnp.asarray(self.tokens[rows])
+        lab = jnp.asarray(self.labels[rows])
+        w = jnp.full(((hi - lo) * m, self.spec.seq), self.w_val,
+                     jnp.float32)
+        grad_fn = self._fns()
+        nrows = (hi - lo) * m
+        if nrows not in self._compiled_rows:
+            # compile outside the timed region so telemetry measures
+            # execution, not tracing
+            jax.block_until_ready(grad_fn(params, tok, lab, w)[0])
+            self._compiled_rows.add(nrows)
+        t0 = time.perf_counter()
+        loss, grads = grad_fn(params, tok, lab, w)
+        jax.block_until_ready(loss)
+        t_wall = time.perf_counter() - t0
+        if self.slowdown > 1.0:
+            # an ACTUAL slow process: burn real wall-clock time
+            time.sleep((self.slowdown - 1.0) * t_wall)
+        gflats = self.sub.flatten_tree(jax.tree.map(np.asarray, grads))
+        meta = {"loss": float(loss), "n_mb": hi - lo,
+                "t_wall": t_wall * self.slowdown}
+        return meta, {f"G|{u}": f for u, f in gflats.items()}
+
+    def accum_grads(self, arrays: Dict[str, np.ndarray]) -> None:
+        sl = {k: np.asarray(v) for k, v in arrays.items()}
+        if self.grad_acc is None:
+            self.grad_acc = sl
+        else:
+            self.grad_acc = {u: self.grad_acc[u] + sl[u] for u in sl}
+
+    def adam_step(self, step_no: int) -> None:
+        if self.grad_acc is None:
+            raise RuntimeError("adam before any gradient round")
+        for g in self.sub.planner.groups:
+            st = self.state[g.name]
+            p, m_, v = adam_update(
+                self.spec.adam, jnp.asarray(st["p"]),
+                jnp.asarray(self.grad_acc[g.name]),
+                jnp.asarray(st["m"]), jnp.asarray(st["v"]),
+                jnp.int32(step_no))
+            self.state[g.name] = {"p": np.asarray(p), "m": np.asarray(m_),
+                                  "v": np.asarray(v)}
+        self.grad_acc = None
+
+    # --- wall-clock probes ----------------------------------------------
+    def probe(self, m: int, phase: str, repeats: int = 2) -> float:
+        """Timed single-layer pass at microbatch ``m`` — the Sec. 3.1
+        profile measurement, run live inside this rank's process."""
+        if phase not in ("fwd", "bwd"):
+            raise ValueError(f"unknown phase {phase!r}")
+        fn = self._probe_fn(phase, m)
+        best = float("inf")
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        if self.slowdown > 1.0:
+            time.sleep((self.slowdown - 1.0) * best * max(repeats, 1))
+        return best * self.slowdown
+
+    def _probe_fn(self, phase: str, m: int):
+        key = (phase, m)
+        if key in self._probe_cache:
+            return self._probe_cache[key]
+        from repro.models import blocks as B
+        from repro.models import model as M
+        cfg = self.spec.cfg
+        if self._probe_params is None:
+            k = jax.random.PRNGKey(0)
+            stages = M.build_stages(cfg)
+            spec0 = stages[0]
+            bp = M._element_init(k, cfg, spec0)
+            shared = B.dense_block_init(k, cfg) if cfg.is_hybrid else None
+            self._probe_params = (spec0, bp, shared)
+        spec0, bp, shared = self._probe_params
+        seq = self.spec.seq
+        x = jax.random.normal(jax.random.PRNGKey(m),
+                              (m, seq, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq)[None], (m, seq))
+        if phase == "fwd":
+            f = jax.jit(lambda p, xx: M.element_apply(
+                cfg, spec0, p, xx, pos, shared)[0])
+            fn = lambda: f(bp, x)                          # noqa: E731
+        else:
+            def sq(p, xx):
+                y, _ = M.element_apply(cfg, spec0, p, xx, pos, shared)
+                return jnp.sum(y * y)
+            f = jax.jit(jax.grad(sq))
+            fn = lambda: f(bp, x)                          # noqa: E731
+        jax.block_until_ready(fn())                        # compile
+        self._probe_cache[key] = fn
+        return fn
+
+
+def _worker_main(spec: WorkerSpec, conn) -> None:
+    """Entry point of one spawned rank process."""
+    channel = Channel(conn, transport=spec.transport)
+    channel.send("ready", {"pid": os.getpid(), "rank": spec.rank})
+    if spec.jax_coordinator:
+        try:    # pragma: no cover - needs a multi-node jax backend
+            jax.distributed.initialize(spec.jax_coordinator,
+                                       num_processes=spec.n_ranks,
+                                       process_id=spec.rank)
+        except Exception:
+            pass
+    worker = _Worker(spec)
+    while True:
+        try:
+            tag, meta, arrays = channel.recv()
+        except (EOFError, OSError):     # coordinator went away
+            break
+        try:
+            if tag == "exit":
+                channel.send("ok")
+                break
+            elif tag == "scatter_state":
+                worker.scatter_state(arrays)
+                channel.send("ok")
+            elif tag == "get_state":
+                channel.send("state", {},
+                             worker.get_state(meta["parts"]))
+            elif tag == "step_begin":
+                worker.begin_step(meta, arrays)
+                channel.send("ok")
+            elif tag == "round":
+                out_meta, out_arrays = worker.round(
+                    meta["lo"], meta["hi"],
+                    {k.split("|", 1)[1]: v for k, v in arrays.items()})
+                channel.send("grads", out_meta, out_arrays)
+            elif tag == "grad_accum":
+                worker.accum_grads(arrays)
+                channel.send("ok")
+            elif tag == "adam":
+                worker.adam_step(meta["step"])
+                channel.send("ok")
+            elif tag == "probe":
+                channel.send("t", {"seconds": worker.probe(
+                    meta["m"], meta["phase"], meta.get("repeats", 2))})
+            elif tag == "slowdown":
+                worker.slowdown = max(float(meta["factor"]), 1.0)
+                channel.send("ok")
+            elif tag == "mem":
+                channel.send("ok", {"nbytes": worker.state_nbytes()})
+            else:
+                channel.send("error",
+                             {"traceback": f"unknown command {tag!r}"})
+        except Exception:   # noqa: BLE001 - forwarded to coordinator
+            channel.send("error", {"traceback": traceback.format_exc()})
+    channel.close()
+
+
+# ---------------------------------------------------------------------------
+# Coordinator side
+# ---------------------------------------------------------------------------
+
+class MultiProcessSubstrate(LoopbackSubstrate):
+    """``LoopbackSubstrate`` surface with a process-per-rank data plane.
+
+    Inherits the flat layout primitives (the single layout path), so
+    host-side resharding (``shard_state`` for init / import) is
+    byte-identical to loopback; the collectives move real bytes between
+    the coordinator and the rank processes.
+    """
+
+    name = "multiproc"
+
+    def __init__(self, planner: UnitPlanner, specs: Sequence[WorkerSpec],
+                 start_method: str = "spawn",
+                 reply_timeout: float = REPLY_TIMEOUT):
+        super().__init__(planner)
+        self.reply_timeout = reply_timeout
+        self.procs: List[mp.process.BaseProcess] = []
+        self.channels: List[Channel] = []
+        ctx = mp.get_context(start_method)
+        try:
+            for spec in specs:
+                parent, child = ctx.Pipe(duplex=True)
+                proc = ctx.Process(target=_worker_main, args=(spec, child),
+                                   daemon=True, name=f"cephalo-rank{spec.rank}")
+                proc.start()
+                child.close()
+                self.procs.append(proc)
+                self.channels.append(Channel(parent,
+                                             transport=spec.transport))
+            for rank in range(self.n):
+                tag, meta, _ = self._recv(rank)
+                if tag != "ready":
+                    raise RuntimeError(
+                        f"rank {rank} failed to start: {tag} {meta}")
+        except Exception:
+            self.close()
+            raise
+
+    # --- messaging ------------------------------------------------------
+    def _recv(self, rank: int) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+        proc = self.procs[rank]
+        try:
+            tag, meta, arrays = self.channels[rank].recv(
+                timeout=self.reply_timeout, alive=proc.is_alive)
+        except EOFError as e:
+            raise RuntimeError(
+                f"rank {rank} worker died (exitcode "
+                f"{proc.exitcode})") from e
+        if tag == "error":
+            raise RuntimeError(
+                f"rank {rank} worker error:\n{meta.get('traceback')}")
+        return tag, meta, arrays
+
+    def request(self, rank: int, tag: str, meta: Optional[dict] = None,
+                arrays: Optional[Dict[str, np.ndarray]] = None
+                ) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """One strict request→reply exchange with one worker."""
+        self.channels[rank].send(tag, meta, arrays)
+        _, r_meta, r_arrays = self._recv(rank)
+        return r_meta, r_arrays
+
+    def request_all(self, tag: str, metas: Optional[List[dict]] = None,
+                    arrays: Optional[List[Optional[dict]]] = None,
+                    ranks: Optional[Sequence[int]] = None
+                    ) -> List[Tuple[dict, Dict[str, np.ndarray]]]:
+        """Fan a request out to ``ranks`` (default: all) and collect the
+        replies **in rank order** — the fixed order every reduction uses,
+        which is what makes the multiproc step numerics match loopback's
+        rank-major accumulation exactly."""
+        ranks = list(ranks) if ranks is not None else list(range(self.n))
+        for i, rank in enumerate(ranks):
+            self.channels[rank].send(
+                tag, metas[i] if metas else None,
+                arrays[i] if arrays else None)
+        out = []
+        for rank in ranks:
+            _, meta, arrs = self._recv(rank)
+            out.append((meta, arrs))
+        return out
+
+    # --- collectives ----------------------------------------------------
+    def gather_flat(self, key: str) -> Dict[str, np.ndarray]:
+        """AllGatherv: every worker's ragged ``key`` slices → full flat
+        unit buffers on the coordinator."""
+        self.stats["all_gather"] += 1
+        replies = self.request_all("get_state",
+                                   metas=[{"parts": [key]}] * self.n)
+        slices = [{g.name: arrs[f"{g.name}|{key}"]
+                   for g in self.planner.groups}
+                  for _, arrs in replies]
+        return self.concat_slices(slices, key=None)
+
+    def allgather_params(self, shards: Optional[List[Dict[str, Any]]] = None,
+                         key: str = "p") -> Dict[str, Any]:
+        """Full params pytree: from the live workers (``shards=None``,
+        one real AllGatherv) or from host-resident shards (the inherited
+        loopback path, used by resharding helpers)."""
+        if shards is not None:
+            return super().allgather_params(shards, key)
+        return self.unflatten_flats(self.gather_flat(key))
+
+    def scatter_grad_flats(self, sums: Dict[str, np.ndarray]) -> None:
+        """ReduceScatterv, scatter half: slice the rank-order-summed
+        full gradient buffers and hand every rank its slice."""
+        self.stats["reduce_scatter"] += 1
+        slices = self.slice_flats(sums)
+        self.request_all("grad_accum",
+                         arrays=[slices[r] for r in range(self.n)])
+
+    # --- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        for rank, ch in enumerate(self.channels):
+            proc = self.procs[rank]
+            try:
+                if proc.is_alive():
+                    ch.send("exit")
+                    ch.recv(timeout=5.0, alive=proc.is_alive)
+            except Exception:
+                pass
+        for proc in self.procs:
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+        for ch in self.channels:
+            ch.close()
+        self.channels = []
+        self.procs = []
+
+    def __del__(self):   # best-effort backstop; close() is the real API
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+class ProcessEngine(TrainEngine):
+    """Multiproc substrate: the MPMD step across real rank processes."""
+
+    def __init__(self, cfg: ArchConfig, plan: Plan, schedule: Schedule,
+                 adam: AdamConfig, seq_len: int, *,
+                 transport: Optional[str] = None,
+                 start_method: str = "spawn",
+                 reply_timeout: float = REPLY_TIMEOUT,
+                 jax_coordinator: Optional[str] = None):
+        if not plan.feasible:
+            raise ValueError(plan.infeasible_reason)
+        self.cfg, self.plan, self.schedule = cfg, plan, schedule
+        self.adam, self.seq = adam, seq_len
+        self.n = plan.n
+        transport = resolve_transport(transport)
+        ratios = normalized_ratios(plan.state_ratios())
+        self.planner = UnitPlanner(cfg, ratios)
+        specs = [WorkerSpec(rank=r.rank, cfg=cfg,
+                            ratios=tuple(float(x) for x in ratios),
+                            m=r.m, ell=r.ell, seq=seq_len, adam=adam,
+                            transport=transport, n_ranks=plan.n,
+                            jax_coordinator=jax_coordinator)
+                 for r in plan.ranks]
+        self.substrate = MultiProcessSubstrate(
+            self.planner, specs, start_method=start_method,
+            reply_timeout=reply_timeout)
+        #: rank -> (m, fwd_layer_s, bwd_layer_s): one timed single-layer
+        #: pass per active rank at each step's end (sequential, so the
+        #: measurements don't contend) — the WallClockOracle's
+        #: passive-telemetry source, in the same units as the replan's
+        #: probe sweep and the planner's latency models.
+        self.last_step_samples: Dict[int, Tuple[int, float, float]] = {}
+        #: rank -> whole-step fwd+bwd compute wall seconds measured
+        #: around the worker boundary (full model, all rounds).
+        self.last_step_walls: Dict[int, float] = {}
+        #: coordinator-side wall seconds of the last whole step.
+        self.last_step_wall_s = 0.0
+
+    # --- TrainEngine surface -------------------------------------------
+    def init_state(self, key: jax.Array) -> Dict[str, int]:
+        from repro.models import model as M
+        params = M.init_params(self.cfg, key)
+        self._scatter_shards(self.substrate.shard_state(params))
+        return {"step": 0}
+
+    def _scatter_shards(self, shards: List[Dict[str, Any]]) -> None:
+        payloads = []
+        for r in range(self.n):
+            arrays = {}
+            for g in self.planner.groups:
+                for part in ("p", "m", "v"):
+                    arrays[f"{g.name}|{part}"] = shards[r][g.name][part]
+            payloads.append(arrays)
+        self.substrate.request_all("scatter_state",
+                                   metas=[{}] * self.n, arrays=payloads)
+
+    def step(self, state: Dict[str, int], big: np.ndarray
+             ) -> Tuple[Dict[str, int], float]:
+        """One training iteration, schedule-driven, across the fleet.
+
+        Round structure and reduction order are identical to the
+        loopback step (rank-major float accumulation), so the two
+        substrates agree numerically; the microbatch work itself runs
+        concurrently in the rank processes.
+        """
+        t_step0 = time.perf_counter()
+        big = np.asarray(big)
+        plan = self.plan
+        if big.shape[0] < plan.global_batch:
+            raise ValueError(
+                f"sample block has {big.shape[0]} rows; the plan's "
+                f"global_batch needs {plan.global_batch}")
+        w_val = 1.0 / (plan.global_batch * self.seq) \
+            if plan.global_batch else 0.0
+        cursor = 0
+        active, payloads = [], []
+        for r in plan.ranks:
+            if r.b == 0:
+                continue
+            rows = big[cursor: cursor + r.b]
+            cursor += r.b
+            active.append(r.rank)
+            payloads.append({"tokens": rows[:, :-1], "labels": rows[:, 1:]})
+        if cursor != plan.global_batch:
+            raise ValueError(
+                f"plan rank batches consumed {cursor} rows, expected "
+                f"global_batch {plan.global_batch}")
+        self.substrate.request_all(
+            "step_begin", metas=[{"w_val": w_val}] * len(active),
+            arrays=payloads, ranks=active)
+
+        total_loss = 0.0
+        any_grads = False
+        walls = {r: 0.0 for r in active}
+        n_mb = {r: 0 for r in active}
+        mb_off = 0
+        for size in self.schedule.chunks(max(plan.ell_pad, 1)):
+            flats = self.substrate.gather_flat("p")         # AllGatherv
+            lo, hi = mb_off, mb_off + size
+            mb_off += size
+            rnd = [r.rank for r in plan.ranks
+                   if r.b > 0 and min(lo, r.ell) < min(hi, r.ell)]
+            if not rnd:
+                continue
+            p_arrays = {f"P|{u}": f for u, f in flats.items()}
+            replies = self.substrate.request_all(
+                "round", metas=[{"lo": lo, "hi": hi}] * len(rnd),
+                arrays=[p_arrays] * len(rnd), ranks=rnd)
+            sums: Optional[Dict[str, np.ndarray]] = None
+            for rank, (meta, arrs) in zip(rnd, replies):
+                if meta["n_mb"] == 0:
+                    continue
+                total_loss += meta["loss"]
+                walls[rank] += meta["t_wall"]
+                n_mb[rank] += meta["n_mb"]
+                g = {k.split("|", 1)[1]: v for k, v in arrs.items()}
+                if sums is None:
+                    sums = {u: np.array(v, dtype=np.float32)
+                            for u, v in g.items()}
+                else:
+                    for u in sums:
+                        sums[u] += g[u]
+            if sums is None:
+                continue
+            self.substrate.scatter_grad_flats(sums)         # ReduceScatterv
+            any_grads = True
+        if not any_grads:
+            # zero-gradient step (every active rank has ell_i == 0):
+            # no optimizer update, state unchanged — same contract as
+            # the loopback trainer.
+            return dict(state), total_loss
+        step_no = state["step"] + 1
+        self.substrate.request_all("adam", metas=[{"step": step_no}] * self.n)
+        self.last_step_walls = {r: walls[r]
+                                for r in active if n_mb[r] > 0}
+        # one timed single-layer pass per active rank, *sequentially* so
+        # the samples don't contend with each other on shared silicon —
+        # unit-consistent with the probe sweep and the planner's models.
+        self.last_step_samples = {
+            r: (plan.ranks[r].m,
+                self.probe(r, plan.ranks[r].m, "fwd", repeats=1),
+                self.probe(r, plan.ranks[r].m, "bwd", repeats=1))
+            for r in active if n_mb[r] > 0}
+        self.last_step_wall_s = time.perf_counter() - t_step0
+        return {"step": step_no}, total_loss
+
+    def gather_params(self, state) -> Dict[str, Any]:
+        return self.substrate.allgather_params(None, "p")
+
+    def export_state(self, state) -> Dict[str, Any]:
+        return {"step": int(state["step"]),
+                "p": self.substrate.allgather_params(None, "p"),
+                "m": self.substrate.allgather_params(None, "m"),
+                "v": self.substrate.allgather_params(None, "v")}
+
+    def import_state(self, exported: Dict[str, Any]) -> Dict[str, int]:
+        shards = self.substrate.shard_state(
+            exported["p"], exported.get("m"), exported.get("v"))
+        self._scatter_shards(shards)
+        return {"step": int(exported.get("step", 0))}
+
+    def close(self) -> None:
+        self.substrate.close()
+
+    # --- wall-clock surface --------------------------------------------
+    def probe(self, rank: int, m: int, phase: str,
+              repeats: int = 2) -> float:
+        """Live single-layer latency measurement on one rank process."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} out of range for n={self.n}")
+        meta, _ = self.substrate.request(
+            rank, "probe", {"m": int(m), "phase": phase,
+                            "repeats": int(repeats)})
+        return float(meta["seconds"])
+
+    def inject_slowdown(self, rank: int, factor: float) -> None:
+        """Make a rank process actually slower (straggler injection)."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} out of range for n={self.n}")
+        self.substrate.request(rank, "slowdown", {"factor": float(factor)})
+
+    # --- MPMD extras (launcher surface) --------------------------------
+    def memory_report(self, state) -> str:
+        replies = self.substrate.request_all("mem", metas=[{}] * self.n)
+        lines = []
+        for r, (meta, _) in enumerate(replies):
+            lines.append(
+                f"rank{r} {self.plan.ranks[r].device:<8} state "
+                f"{meta['nbytes'] / (1 << 20):8.1f} MiB  "
+                f"(ratio {self.plan.ranks[r].state_ratio:.3f}, "
+                f"pid {self.substrate.procs[r].pid})")
+        return "\n".join(lines)
+
+    def simulated_iteration_seconds(self) -> Dict[str, float]:
+        return {
+            "layer_s": self.plan.predicted_layer_s,
+            "iteration_s": self.plan.predicted_iter_s,
+            "throughput_samples_s": self.plan.predicted_throughput,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock telemetry
+# ---------------------------------------------------------------------------
+
+class WallClockOracle:
+    """Real-measurement latency source for the elastic control loop.
+
+    Drop-in for :class:`repro.core.engine.elastic.CostModelOracle` —
+    same ``(rank, m, phase) -> seconds`` query surface, same
+    ``degrade``/``restore`` straggler hooks — but every number is a
+    wall-clock measurement from a rank *process*:
+
+    * passive queries (the per-step telemetry ingest at the plan's
+      ``m_i``) are served from the engine's last-step measured fwd/bwd
+      per-layer timings — free, the step ran anyway;
+    * probe queries (the replan's Sec. 3.1 ``m``-grid sweep) run a timed
+      single-layer pass inside the worker;
+    * ``degrade(rank, f)`` makes the worker sleep ``(f-1)×`` its compute
+      time — an actually-slow process, re-applied across replans (the
+      slow *machine* stays slow even after the fleet is respawned).
+
+    An :class:`~repro.core.engine.elastic.ElasticEngine` binds the
+    oracle to its inner engine automatically (``bind``), including after
+    every replan/migration.
+    """
+
+    def __init__(self, probe_repeats: int = 2):
+        self.engine: Optional[ProcessEngine] = None
+        self.factors: Dict[int, float] = {}
+        self.probe_repeats = probe_repeats
+
+    def bind(self, engine: ProcessEngine) -> None:
+        if not hasattr(engine, "probe") or \
+                not hasattr(engine, "inject_slowdown"):
+            raise TypeError(
+                "WallClockOracle needs the multiproc substrate "
+                f"(engine {type(engine).__name__} has no live probe "
+                "surface); use CostModelOracle for simulated substrates")
+        self.engine = engine
+        for rank, factor in self.factors.items():
+            if rank < engine.n:
+                engine.inject_slowdown(rank, factor)
+
+    def degrade(self, rank: int, factor: float) -> None:
+        self.factors[rank] = float(factor)
+        if self.engine is not None and rank < self.engine.n:
+            self.engine.inject_slowdown(rank, factor)
+
+    def restore(self, rank: int) -> None:
+        self.factors.pop(rank, None)
+        if self.engine is not None and rank < self.engine.n:
+            self.engine.inject_slowdown(rank, 1.0)
+
+    def __call__(self, rank: int, m: int, phase: str) -> float:
+        if phase not in ("fwd", "bwd"):
+            raise ValueError(
+                f"unknown phase {phase!r}; expected 'fwd' or 'bwd'")
+        if self.engine is None:
+            raise RuntimeError(
+                "WallClockOracle is unbound; construct the engine with "
+                "build_train_step(..., substrate='multiproc', elastic=..., "
+                "oracle=oracle) or call oracle.bind(engine)")
+        cached = self.engine.last_step_samples.get(rank)
+        if cached is not None and cached[0] == m:
+            return cached[1] if phase == "fwd" else cached[2]
+        return self.engine.probe(rank, m, phase,
+                                 repeats=self.probe_repeats)

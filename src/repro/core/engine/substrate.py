@@ -14,7 +14,10 @@ collectives of the paper's Fig. 4 rounds happen; substrates decide
   (AllGatherv semantics, zero padding overhead) and full-grad →
   per-rank-slice scatter.  On a real fleet each rank is one JAX process
   and these calls become NCCL/gloo collectives; the surface stays the
-  same, which is the seam a future multi-process substrate implements.
+  same, which is the seam
+  :class:`repro.core.engine.multiproc.MultiProcessSubstrate` implements
+  with one OS process per rank (the shards live in the workers, the
+  collectives move real bytes between processes).
 
 The loopback substrate counts collective *events* (``stats``) so tests
 can assert a schedule's round structure without parsing HLO.  The
@@ -114,6 +117,75 @@ class LoopbackSubstrate(CollectiveSubstrate):
         self.planner = planner
         self.n = planner.n
 
+    # --- flat wire format ---------------------------------------------------
+    # The three primitives below are the single layout path shared by the
+    # loopback collectives AND the multiproc substrate's coordinator /
+    # workers: a model-shaped pytree ⇄ per-unit flat fp32 buffers
+    # (``(padded,)``, or ``(count, padded)`` for stacked stage units)
+    # ⇄ per-rank ragged slices.  Params, gradients, optimizer moments,
+    # and elastic state migration all route through them, so the layouts
+    # can never desynchronize.
+
+    def flatten_tree(self, tree: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Full model-shaped pytree → {unit: flat padded buffer}."""
+        grouped = self.planner.split(tree)
+        out: Dict[str, np.ndarray] = {}
+        for g in self.planner.groups:
+            sub = grouped[g.name]
+            if g.count > 1:
+                out[g.name] = np.stack([
+                    np.asarray(fsdp.flatten_unit(
+                        g.layout, jax.tree.map(lambda a, i=i: a[i], sub)))
+                    for i in range(g.count)])
+            else:
+                out[g.name] = np.asarray(fsdp.flatten_unit(g.layout, sub))
+        return out
+
+    def slice_flats(self, flats: Dict[str, np.ndarray]
+                    ) -> List[Dict[str, np.ndarray]]:
+        """{unit: flat buffer} → per-rank {unit: ragged slice} (the
+        scatter half of AllGatherv/ReduceScatterv)."""
+        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
+        for g in self.planner.groups:
+            flat = flats[g.name]
+            off = 0
+            for r, s in enumerate(g.layout.shard_sizes):
+                out[r][g.name] = np.asarray(flat[..., off: off + s]).copy()
+                off += s
+        return out
+
+    def concat_slices(self, slices: Sequence[Dict[str, Any]],
+                      key: Optional[str] = None) -> Dict[str, np.ndarray]:
+        """Per-rank ragged slices → {unit: flat buffer} (the gather half
+        of AllGatherv).  ``key`` indexes {"p","m","v"} state shards;
+        ``None`` takes the slice itself (gradient buffers)."""
+        out: Dict[str, np.ndarray] = {}
+        for g in self.planner.groups:
+            parts = []
+            for r in range(self.n):
+                s = slices[r][g.name]
+                if key is not None:
+                    s = s[key]
+                parts.append(np.asarray(s)[..., : g.layout.shard_sizes[r]])
+            out[g.name] = np.concatenate(parts, axis=-1)
+        return out
+
+    def unflatten_flats(self, flats: Dict[str, np.ndarray]
+                        ) -> Dict[str, Any]:
+        """{unit: flat buffer} → full model-shaped pytree."""
+        grouped: Dict[str, Any] = {}
+        for g in self.planner.groups:
+            flat = flats[g.name]
+            if g.count > 1:
+                elems = [fsdp.unflatten_unit(g.layout, jnp.asarray(flat[i]))
+                         for i in range(g.count)]
+                grouped[g.name] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *elems)
+            else:
+                grouped[g.name] = fsdp.unflatten_unit(
+                    g.layout, jnp.asarray(flat))
+        return self.planner.merge(grouped)
+
     # --- state layout -------------------------------------------------------
     def shard_tree(self, tree: Dict[str, Any]
                    ) -> List[Dict[str, np.ndarray]]:
@@ -123,12 +195,7 @@ class LoopbackSubstrate(CollectiveSubstrate):
         moments — state sharding, gradient scatter, and elastic state
         migration all go through here, so they can never desynchronize.
         """
-        grouped = self.planner.split(tree)
-        out: List[Dict[str, np.ndarray]] = [dict() for _ in range(self.n)]
-        for g in self.planner.groups:
-            for r, s in enumerate(self._shard_group(g, grouped[g.name])):
-                out[r][g.name] = s
-        return out
+        return self.slice_flats(self.flatten_tree(tree))
 
     def shard_state(self, params: Dict[str, Any],
                     m_tree: Optional[Dict[str, Any]] = None,
@@ -152,45 +219,12 @@ class LoopbackSubstrate(CollectiveSubstrate):
                 }
         return shards
 
-    def _shard_group(self, g: UnitGroup, tree: Any) -> List[np.ndarray]:
-        """One unit group's tree → per-rank ragged buffers (stacked for
-        count>1 stage units)."""
-        if g.count > 1:
-            per_rank: List[List[np.ndarray]] = [[] for _ in range(self.n)]
-            for i in range(g.count):
-                flat = fsdp.flatten_unit(
-                    g.layout, jax.tree.map(lambda a, i=i: a[i], tree))
-                for r, s in enumerate(
-                        fsdp.shard_unit_ragged(g.layout, flat)):
-                    per_rank[r].append(s)
-            return [np.stack(p) for p in per_rank]
-        flat = fsdp.flatten_unit(g.layout, tree)
-        return fsdp.shard_unit_ragged(g.layout, flat)
-
     # --- collectives --------------------------------------------------------
     def allgather_params(self, shards: List[Dict[str, Any]],
                          key: str = "p") -> Dict[str, Any]:
         """Reassemble the full params pytree from all ranks' shards."""
         self.stats["all_gather"] += 1
-        grouped: Dict[str, Any] = {}
-        for g in self.planner.groups:
-            if g.count > 1:
-                elems = []
-                for i in range(g.count):
-                    flat = np.concatenate(
-                        [shards[r][g.name][key][i, : g.layout.shard_sizes[r]]
-                         for r in range(self.n)])
-                    elems.append(fsdp.unflatten_unit(
-                        g.layout, jnp.asarray(flat)))
-                grouped[g.name] = jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *elems)
-            else:
-                flat = np.concatenate(
-                    [shards[r][g.name][key][: g.layout.shard_sizes[r]]
-                     for r in range(self.n)])
-                grouped[g.name] = fsdp.unflatten_unit(
-                    g.layout, jnp.asarray(flat))
-        return self.planner.merge(grouped)
+        return self.unflatten_flats(self.concat_slices(shards, key))
 
     def reduce_scatter_grads(self, grads_full: Any
                              ) -> List[Dict[str, np.ndarray]]:

@@ -1,0 +1,213 @@
+"""Host-side collective transport for the multi-process MPMD substrate.
+
+The paper's runtime (Sec. 2 / App. C) moves two kinds of bulk payload per
+collective round: gathered full-parameter buffers (AllGatherv) and full
+gradient buffers (ReduceScatterv).  This module is the wire under
+:mod:`repro.core.engine.multiproc`: a tagged message channel between the
+coordinator and one worker process, carrying a small pickled header over
+a ``multiprocessing`` duplex pipe (an ``AF_UNIX`` socket pair on Linux)
+and array payloads over one of two data planes:
+
+* ``shm`` (default) — a per-direction :class:`ShmArena`
+  (``multiprocessing.shared_memory``) the sender memcpys arrays into;
+  the header carries only offsets.  Safe without locks because the
+  substrate's protocol is strict request→reply per channel: the sender
+  never reuses an arena before the receiver has copied out and replied.
+  Arenas grow by replacement (a new segment is announced in the header)
+  and fall back to the pipe when shared memory is unavailable.
+* ``pipe`` — array bytes framed directly on the socket pair
+  (``send_bytes``), no shared memory involved.
+
+Select with ``CEPHALO_MP_TRANSPORT=shm|pipe`` or the engine's
+``transport=`` knob.  Both planes carry identical bytes — the parity
+tests run the same step on either.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import secrets
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: transport selection order: explicit arg > env > default
+DEFAULT_TRANSPORT = "shm"
+TRANSPORTS = ("shm", "pipe")
+
+
+def resolve_transport(name: Optional[str] = None) -> str:
+    name = name or os.environ.get("CEPHALO_MP_TRANSPORT", DEFAULT_TRANSPORT)
+    if name not in TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {name!r}; choose from {TRANSPORTS}")
+    return name
+
+
+def _try_import_shm():
+    try:
+        from multiprocessing import shared_memory
+        return shared_memory
+    except Exception:   # pragma: no cover - py<3.8 / exotic platforms
+        return None
+
+
+class ShmArena:
+    """One-direction bulk buffer between two processes in lockstep.
+
+    The *owner* creates (and grows, by replacement) the segment; the
+    *peer* attaches lazily by the name announced in each message header.
+    ``write`` returns ``None`` when shared memory cannot hold the
+    payload (creation failed) — the caller then inlines the arrays over
+    the pipe.
+    """
+
+    def __init__(self, owner: bool, size: int = 1 << 22):
+        self._shm_mod = _try_import_shm()
+        self.owner = owner
+        self.size = int(size)
+        self.seg = None
+        self.name: Optional[str] = None
+        self.disabled = self._shm_mod is None
+
+    def _ensure(self, nbytes: int) -> bool:
+        if self.disabled:
+            return False
+        if self.seg is not None and self.size >= nbytes:
+            return True
+        want = max(self.size, 1 << 16)
+        while want < nbytes:
+            want *= 2
+        try:
+            seg = self._shm_mod.SharedMemory(
+                name=f"cephalo_{os.getpid()}_{secrets.token_hex(4)}",
+                create=True, size=want)
+        except Exception:
+            self.disabled = True
+            return False
+        self.close()
+        self.seg, self.size, self.name = seg, want, seg.name
+        return True
+
+    def write(self, arrays: Dict[str, np.ndarray]
+              ) -> Optional[Tuple[str, List[Tuple[str, Any, Any, int]]]]:
+        """Copy arrays into the arena; return (segment_name, manifest)
+        where manifest rows are (key, shape, dtype_str, offset)."""
+        total = sum(int(a.nbytes) for a in arrays.values())
+        if not self._ensure(total):
+            return None
+        manifest, off = [], 0
+        buf = self.seg.buf
+        for k, a in arrays.items():
+            a = np.ascontiguousarray(a)
+            n = int(a.nbytes)
+            buf[off: off + n] = a.reshape(-1).view(np.uint8).data
+            manifest.append((k, a.shape, str(a.dtype), off))
+            off += n
+        return self.seg.name, manifest
+
+    def read(self, name: str, manifest) -> Dict[str, np.ndarray]:
+        """Attach (or re-attach) to ``name`` and copy the arrays out."""
+        if self.seg is None or self.name != name:
+            # NOTE: attaching registers the segment with the resource
+            # tracker shared across the spawn tree — a harmless dup of
+            # the owner's registration; the owner's unlink clears it.
+            self.close()
+            self.seg = self._shm_mod.SharedMemory(name=name)
+            self.name = name
+        out: Dict[str, np.ndarray] = {}
+        buf = self.seg.buf
+        for k, shape, dtype, off in manifest:
+            n = int(np.prod(shape)) * np.dtype(dtype).itemsize
+            out[k] = np.frombuffer(
+                bytes(buf[off: off + n]), dtype=dtype).reshape(shape)
+        return out
+
+    def close(self) -> None:
+        if self.seg is None:
+            return
+        try:
+            self.seg.close()
+            if self.owner:
+                self.seg.unlink()
+        except Exception:
+            pass
+        self.seg = None
+        self.name = None
+
+
+class Channel:
+    """Tagged request/reply messaging over one duplex pipe connection.
+
+    Each message is ``(tag, meta, arrays)``: a pickled ``(tag, meta,
+    manifest)`` header frame followed (pipe mode) by one bytes frame per
+    array, or (shm mode) by nothing — the header's manifest points into
+    the sender's arena.  Strictly alternating request→reply per channel;
+    the substrate enforces that calling pattern.
+    """
+
+    def __init__(self, conn, transport: str = DEFAULT_TRANSPORT):
+        self.conn = conn
+        self.transport = resolve_transport(transport)
+        use_shm = self.transport == "shm"
+        # each endpoint owns (creates, grows, unlinks) its own send
+        # arena and attaches read-only to the peer's by announced name.
+        self._send_arena = ShmArena(owner=True) if use_shm else None
+        self._recv_arena = ShmArena(owner=False) if use_shm else None
+
+    # --- send ---------------------------------------------------------------
+    def send(self, tag: str, meta: Optional[dict] = None,
+             arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+        arrays = arrays or {}
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        placed = self._send_arena.write(arrays) \
+            if (self._send_arena is not None and arrays) else None
+        if placed is not None:
+            seg_name, manifest = placed
+            header = (tag, meta or {}, ("shm", seg_name, manifest))
+            self.conn.send_bytes(pickle.dumps(header, protocol=4))
+            return
+        manifest = [(k, a.shape, str(a.dtype)) for k, a in arrays.items()]
+        header = (tag, meta or {}, ("pipe", None, manifest))
+        self.conn.send_bytes(pickle.dumps(header, protocol=4))
+        for _, a in arrays.items():
+            self.conn.send_bytes(
+                np.ascontiguousarray(a).reshape(-1).view(np.uint8).data)
+
+    # --- recv ---------------------------------------------------------------
+    def recv(self, timeout: Optional[float] = None,
+             alive=None) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+        """Blocking receive; with ``timeout``, polls in 50ms slices and
+        calls ``alive()`` between slices so a dead peer raises instead of
+        hanging forever."""
+        if timeout is not None:
+            waited = 0.0
+            while not self.conn.poll(0.05):
+                waited += 0.05
+                if alive is not None and not alive():
+                    raise EOFError("peer process died")
+                if waited >= timeout:
+                    raise TimeoutError(
+                        f"no message within {timeout:.0f}s")
+        tag, meta, (plane, seg_name, manifest) = pickle.loads(
+            self.conn.recv_bytes())
+        if plane == "shm":
+            if self._recv_arena is None:
+                self._recv_arena = ShmArena(owner=False)
+            arrays = self._recv_arena.read(seg_name, manifest)
+        else:
+            arrays = {}
+            for k, shape, dtype in manifest:
+                buf = self.conn.recv_bytes()
+                arrays[k] = np.frombuffer(buf, dtype=dtype).reshape(shape)
+        return tag, meta, arrays
+
+    def close(self) -> None:
+        for arena in (self._send_arena, self._recv_arena):
+            if arena is not None:
+                arena.close()
+        try:
+            self.conn.close()
+        except Exception:
+            pass

@@ -110,9 +110,14 @@ class HeteroTrainer:
     def rank_batches(self, big: np.ndarray) -> List[Optional[Dict]]:
         """Slice a (B, seq+1) global sample block by the plan's b_i —
         *unpadded* per-rank shapes (the MPMD difference)."""
+        if big.shape[0] < self.plan.global_batch:
+            raise ValueError(
+                f"sample block has {big.shape[0]} rows; the plan's "
+                f"global_batch needs {self.plan.global_batch}")
         out: List[Optional[Dict]] = []
         cursor = 0
-        w_val = 1.0 / (self.plan.global_batch * self.seq)
+        b = self.plan.global_batch
+        w_val = 1.0 / (b * self.seq) if b else 0.0
         for r in self.plan.ranks:
             if r.b == 0:
                 out.append(None)
@@ -124,7 +129,11 @@ class HeteroTrainer:
                 "labels": jnp.asarray(rows[:, 1:]),
                 "weights": jnp.full((r.b, self.seq), w_val, jnp.float32),
             })
-        assert cursor == self.plan.global_batch
+        if cursor != self.plan.global_batch:
+            raise ValueError(
+                f"plan rank batches consumed {cursor} rows, expected "
+                f"global_batch {self.plan.global_batch} "
+                f"(Σ b_i = {sum(r.b for r in self.plan.ranks)})")
         return out
 
     # --- the loopback step ---------------------------------------------------
@@ -181,6 +190,11 @@ class HeteroTrainer:
             round_shards = self.software_reduce_scatter(grads_sum)  # RS
             grad_shards = self.substrate.accumulate_grad_shards(
                 grad_shards, round_shards)
+        if grad_shards is None:
+            # No collective round produced gradients (e.g. every active
+            # rank has ell_i == 0): skip the optimizer update and return
+            # the shards unchanged rather than crashing on grad_shards[r].
+            return shards, total_loss
         # local Adam on each rank's shard (ZeRO-3: fully local)
         new_shards: List[Dict[str, Any]] = []
         for r in range(self.n):

@@ -130,6 +130,40 @@ def refit_cluster_model(cm, fwd_samples: Sequence[Sequence[Tuple[int, float]]],
     return ClusterCostModel(cm.cluster, cm.model, per_rank, cm.comm)
 
 
+def wallclock_cluster_model(cluster, cfg: ArchConfig, seq: int,
+                            ms: Sequence[int] = PROFILE_MS,
+                            repeats: int = 2):
+    """Cost model in *this host's* wall-clock units — the multiproc
+    substrate's bootstrap (Sec. 3.1 profile, no spec rescaling).
+
+    The multi-process runtime's rank fleet is N local worker processes,
+    all on this host's silicon, so the observed truth is a homogeneous
+    cluster whose single-layer latency is what one timed layer measures
+    *here*.  Every rank gets the same host-measured fwd/bwd
+    :class:`~repro.core.cost_model.LatencyModel`; memory stays analytic
+    (XLA:CPU exposes no allocator stats — module docstring) and comm
+    comes from the cluster spec.  Solving the initial plan against this
+    model puts the planner's predictions in the same units the elastic
+    runtime's :class:`~repro.core.engine.multiproc.WallClockOracle`
+    measures in, so the control loop starts calibrated: no spurious
+    replan on a healthy fleet, a real replan when a worker process
+    actually slows down.
+    """
+    from repro.core.cost_model import (ClusterCostModel, CommModel,
+                                       DeviceCost, LatencyModel)
+    fwd = profile_layer_forward(cfg, seq, ms=ms, repeats=repeats)
+    bwd = profile_layer_backward(cfg, seq, ms=ms, repeats=repeats)
+    t_fwd = LatencyModel([m for m, _ in fwd], [t for _, t in fwd])
+    t_bwd = LatencyModel([m for m, _ in bwd], [t for _, t in bwd])
+    mem = analytic_memory(cfg, seq)
+    per_rank = [DeviceCost(spec, t_fwd, t_bwd, mem, None)
+                for spec in cluster.devices]
+    comm = CommModel(link_gbps=cluster.link_gbps * cluster.link_efficiency,
+                     n=cluster.n)
+    return ClusterCostModel(cluster, build_model_stats(cfg, seq),
+                            per_rank, comm)
+
+
 def analytic_memory(cfg: ArchConfig, seq: int) -> MemoryModel:
     stats = build_model_stats(cfg, seq)
     per_sample = sum(s.act_bytes * c for s, c in stats.layers) + \

@@ -5,9 +5,15 @@ Two substrates (``repro.core.engine.build_train_step``):
 * ``--runtime spmd`` — the Cephalo SPMD step on a jax mesh (homogeneous
   pods; the production path).  Device count comes from the environment;
   the launcher synthesizes an even plan for it.
-* ``--runtime mpmd`` — the heterogeneous MPMD loopback runtime: profiles /
-  builds the cost model for ``--cluster``, runs the Cephalo planner, then
+* ``--runtime mpmd`` — the heterogeneous MPMD runtime: profiles / builds
+  the cost model for ``--cluster``, runs the Cephalo planner, then
   trains with truly uneven per-rank batches and state shards.
+  ``--substrate loopback`` (default) simulates the fleet in-process;
+  ``--substrate multiproc --nprocs N`` runs one OS process per rank
+  (``repro.core.engine.multiproc``) with host-side AllGatherv /
+  ReduceScatterv and *wall-clock* telemetry — ``--elastic`` then refits
+  from real measurements, and ``--straggler`` makes the chosen worker
+  process actually slower instead of scaling an oracle.
 
 ``--ga-mode`` selects any registered gradient-accumulation schedule
 (layered / per_microbatch / interleaved / ...) on either substrate.
@@ -25,6 +31,12 @@ Example (CPU, small model)::
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
         --reduced --steps 20 --batch 16 --seq 64 --runtime mpmd \
         --cluster cluster-a --elastic --straggler 0:2.5@8
+
+Real processes + real wall-clock (the ROADMAP telemetry item)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny-llama \
+        --reduced --steps 10 --batch 8 --seq 16 --runtime mpmd \
+        --substrate multiproc --nprocs 2 --elastic --straggler 0:4.0@3
 """
 
 from __future__ import annotations
@@ -81,8 +93,26 @@ def run_mpmd(args) -> None:
     if args.reduced:
         cfg = cfg.reduced()
     cluster = CLUSTERS[args.cluster]()
-    stats = build_model_stats(cfg, args.seq)
-    cm = analytic_cluster_model(cluster, stats)
+    if args.nprocs:
+        # size the fleet explicitly: cycle the named cluster's device
+        # specs out to --nprocs ranks (one worker process per rank),
+        # keeping its link efficiency / topology fields intact
+        import dataclasses
+        devices = [cluster.devices[i % len(cluster.devices)]
+                   for i in range(args.nprocs)]
+        cluster = dataclasses.replace(
+            cluster, devices=devices,
+            name=f"{cluster.name}x{args.nprocs}")
+    if args.substrate == "multiproc":
+        # bootstrap the planner in *wall-clock* units: the rank fleet is
+        # N local processes, so host-measured single-layer latency is
+        # the observed truth and the elastic loop starts calibrated
+        from repro.core.profiler import wallclock_cluster_model
+        print("profiling host wall-clock latency models ...")
+        cm = wallclock_cluster_model(cluster, cfg, args.seq)
+    else:
+        cm = analytic_cluster_model(cluster,
+                                    build_model_stats(cfg, args.seq))
     plan = auto_solve(cm, args.batch)
     print(plan.summary())
     if not plan.feasible:
@@ -92,7 +122,9 @@ def run_mpmd(args) -> None:
     if args.elastic:
         from repro.core.engine.elastic import (CostModelOracle,
                                                ElasticConfig)
-        oracle = CostModelOracle(cm)
+        from repro.core.engine.multiproc import WallClockOracle
+        oracle = WallClockOracle() if args.substrate == "multiproc" \
+            else CostModelOracle(cm)
         elastic_kw = dict(elastic=ElasticConfig(), cost_model=cm,
                           oracle=oracle)
         if args.straggler:
@@ -109,27 +141,41 @@ def run_mpmd(args) -> None:
     elif args.straggler:
         raise SystemExit("--straggler needs --elastic")
     engine = build_train_step(cfg, plan, schedule=args.ga_mode,
-                              substrate="loopback",
+                              substrate=args.substrate,
                               adam=AdamConfig(lr=args.lr),
                               seq_len=args.seq, **elastic_kw)
-    state = engine.init_state(jax.random.PRNGKey(args.seed))
-    print(engine.memory_report(state))
-    sim = engine.simulated_iteration_seconds()
-    print(f"simulated iteration: {sim['iteration_s']*1e3:.1f} ms "
-          f"({sim['throughput_samples_s']:.2f} samples/s)")
-    state = _train_loop(engine, args, plan, state=state, on_step=on_step)
-    if args.elastic:
-        for ev in engine.events:
-            print(f"replan@{ev.step} adopted={ev.adopted}: {ev.reason}")
-        if engine.plan is not plan:
-            print("final plan after replanning:")
-            print(engine.plan.summary())
-    if args.checkpoint:
-        from repro.checkpoint import checkpointing as C
-        final_plan = engine.plan if args.elastic else plan
-        C.save(args.checkpoint, args.steps, state, {},
-               meta={"plan": final_plan.to_json()})
-        print(f"saved checkpoint to {args.checkpoint}")
+    try:
+        state = engine.init_state(jax.random.PRNGKey(args.seed))
+        print(engine.memory_report(state))
+        sim = engine.simulated_iteration_seconds()
+        print(f"predicted iteration: {sim['iteration_s']*1e3:.1f} ms "
+              f"({sim['throughput_samples_s']:.2f} samples/s)")
+        state = _train_loop(engine, args, plan, state=state,
+                            on_step=on_step)
+        if args.elastic:
+            for ev in engine.events:
+                print(f"replan@{ev.step} adopted={ev.adopted}: {ev.reason}")
+            if engine.plan is not plan:
+                print("final plan after replanning:")
+                print(engine.plan.summary())
+        if args.checkpoint:
+            from repro.checkpoint import checkpointing as C
+            final_plan = engine.plan if args.elastic else plan
+            if args.substrate == "multiproc":
+                # worker-held shards → the substrate-independent
+                # exported pytrees (see checkpointing module docstring)
+                exported = engine.export_state(state)
+                C.save(args.checkpoint, args.steps,
+                       [{k: exported[k] for k in ("p", "m", "v")}],
+                       {"step": exported["step"]},
+                       meta={"plan": final_plan.to_json(),
+                             "format": "exported"})
+            else:
+                C.save(args.checkpoint, args.steps, state, {},
+                       meta={"plan": final_plan.to_json()})
+            print(f"saved checkpoint to {args.checkpoint}")
+    finally:
+        engine.close()
 
 
 def run_spmd(args) -> None:
@@ -164,6 +210,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ga-mode", default="layered",
                     choices=list_schedules())
+    ap.add_argument("--substrate", default="loopback",
+                    choices=("loopback", "multiproc"),
+                    help="mpmd collective substrate: in-process loopback "
+                         "or one OS process per rank (multiproc)")
+    ap.add_argument("--nprocs", type=int, default=0,
+                    help="size the rank fleet explicitly (cycles the "
+                         "--cluster device specs); 0 = cluster size")
     ap.add_argument("--elastic", action="store_true",
                     help="enable the replanning runtime (mpmd only)")
     ap.add_argument("--straggler", default="",
@@ -175,6 +228,9 @@ def main() -> None:
         raise SystemExit("--elastic/--straggler require --runtime mpmd "
                          "(the replanning loop drives the planner, which "
                          "the homogeneous SPMD launcher bypasses)")
+    if args.runtime != "mpmd" and (args.substrate != "loopback"
+                                   or args.nprocs):
+        raise SystemExit("--substrate/--nprocs apply to --runtime mpmd")
     if args.runtime == "mpmd":
         run_mpmd(args)
     else:

@@ -54,6 +54,7 @@ def _mini_cm(cfg, seq):
 
 # --- migration parity (loopback) ---------------------------------------------
 
+@pytest.mark.slow
 def test_loopback_migration_matches_from_scratch_reshard():
     """After real training steps (non-zero Adam moments), migration to a
     plan with different ratios AND different rank count must equal a
@@ -105,6 +106,16 @@ def test_loopback_migration_matches_from_scratch_reshard():
     assert abs(loss_b - loss_a) < 1e-3
 
 
+def test_cost_model_oracle_rejects_unknown_phase():
+    """Regression: a typo'd phase used to silently price as 'bwd'."""
+    cfg = get_arch("tiny-llama").reduced()
+    oracle = CostModelOracle(_mini_cm(cfg, 16))
+    assert oracle(0, 2, "fwd") > 0
+    assert oracle(0, 2, "bwd") > 0
+    with pytest.raises(ValueError, match="phase"):
+        oracle(0, 2, "backward")
+
+
 # --- control loop -------------------------------------------------------------
 
 def _elastic_engine(cfg, cm, batch, seq, **ecfg_kw):
@@ -120,6 +131,7 @@ def _elastic_engine(cfg, cm, batch, seq, **ecfg_kw):
     return eng, oracle, plan
 
 
+@pytest.mark.slow
 def test_straggler_triggers_replan_and_recovers():
     cfg = get_arch("tiny-llama").reduced()
     seq, batch = 32, 48

@@ -108,6 +108,7 @@ def _hetero_plan():
     return Plan(model="toy", cluster="toy", global_batch=9, ranks=ranks)
 
 
+@pytest.mark.slow
 def test_loopback_schedule_parity_and_collective_structure():
     """All schedules: identical grads (→ identical update); the collective
     event count reflects the schedule's round structure."""
