@@ -1,105 +1,158 @@
-"""Multiproc vs loopback MPMD throughput — same plan, same schedule,
-real process boundaries.
+"""Multiproc topologies vs loopback MPMD — same plan, same schedule,
+real process boundaries, hub-vs-ring data-plane accounting.
 
 The loopback substrate executes the per-rank programs *serially* inside
-one process; the multiproc substrate runs them concurrently in one OS
-process per rank but pays real IPC for every AllGatherv/ReduceScatterv
-round.  This benchmark runs the identical (plan, schedule) step on both
-substrates and reports:
+one process.  The multiproc substrate runs them concurrently in one OS
+process per rank, with the collective payloads moving over one of two
+topologies:
 
-* measured steps/s on each substrate (after a compile warmup step);
-* the per-rank whole-step compute wall-clock the multiproc workers
-  measured around the worker boundary (the elastic runtime's telemetry
-  pairs this with single-layer probes — cf. paper Sec. 3.1 profiling);
-* a parity column: max |Δ| over exported params + Adam moments after
-  the timed steps — the cross-substrate equivalence the engine layer
-  guarantees (0.0 expected on one host).
+* ``hub`` — every AllGatherv/ReduceScatterv payload passes through the
+  coordinator: O(N · total_bytes) per round at one endpoint;
+* ``ring`` — payloads move peer-to-peer over worker↔worker ring
+  channels; the coordinator carries control messages only, so its
+  per-round data-plane bytes drop to ~0 (the acceptance gate of
+  ISSUE 4 — visible at any N, stark at ``--nprocs 4``).
 
-    PYTHONPATH=src python -m benchmarks.multiproc_throughput
+For each requested topology this benchmark runs the identical
+(plan, schedule) step and reports measured steps/s, the per-round
+collective bytes that crossed coordinator channels, the per-rank
+worker-measured step wall-clock, and a parity column: max |Δ| over
+exported params + Adam moments vs the loopback run (0.0 expected —
+all three substrates are bitwise-identical by construction).
+
+    PYTHONPATH=src python -m benchmarks.multiproc_throughput \
+        [--topology hub|ring|both] [--nprocs N] [--steps K] \
+        [--schedule layered|per_microbatch|interleaved]
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
+#: (m, ell, ratio-weight) specs cycled out to --nprocs ranks: ragged on
+#: purpose so the AllGatherv/ReduceScatterv are genuinely variable-size.
+RANK_SPECS = [(3, 2, 0.6), (2, 1, 0.4), (1, 2, 0.3), (2, 2, 0.2)]
 
-def rows(batch: int = 8, seq: int = 16, steps: int = 4,
-         schedule: str = "layered") -> List[Dict]:
+
+def _plan(nprocs: int):
+    from repro.core.partition import Plan, RankPlan
+    specs = [RANK_SPECS[i % len(RANK_SPECS)] for i in range(nprocs)]
+    wsum = sum(w for _, _, w in specs)
+    ranks = [RankPlan(i, chr(ord("A") + i % 26), m=m, ell=ell,
+                      state_ratio=w / wsum)
+             for i, (m, ell, w) in enumerate(specs)]
+    return Plan(model="toy", cluster=f"{nprocs}proc",
+                global_batch=sum(m * ell for m, ell, _ in specs),
+                ranks=ranks)
+
+
+def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
+         schedule: str = "layered",
+         topologies: tuple = ("hub", "ring")) -> List[Dict]:
     import jax
     import jax.numpy as jnp
 
     from repro.configs.base import get_arch
     from repro.core.engine import build_train_step
-    from repro.core.partition import Plan, RankPlan
+    from repro.core.engine.multiproc import COLLECTIVE_TAGS
     from repro.data.pipeline import DataConfig, SyntheticStream
     from repro.optim.adam import AdamConfig
 
     cfg = get_arch("tiny-llama").reduced()
-    ranks = [RankPlan(0, "A", m=3, ell=2, state_ratio=0.6),
-             RankPlan(1, "B", m=2, ell=1, state_ratio=0.4)]
-    plan = Plan(model="toy", cluster="2proc", global_batch=batch,
-                ranks=ranks)
+    plan = _plan(nprocs)
+    batch = plan.global_batch
     stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=11))
 
-    def run(substrate):
+    def run(substrate, **kw):
         eng = build_train_step(cfg, plan, substrate=substrate,
                                schedule=schedule,
-                               adam=AdamConfig(lr=1e-3), seq_len=seq)
+                               adam=AdamConfig(lr=1e-3), seq_len=seq, **kw)
         state = eng.init_state(jax.random.PRNGKey(0))
         state, _ = eng.step(state, stream.sample(0, batch))   # compile
+        bytes0 = eng.substrate.coordinator_bytes(COLLECTIVE_TAGS) \
+            if substrate == "multiproc" else 0
         t0 = time.perf_counter()
         for step in range(1, steps + 1):
             state, loss = eng.step(state, stream.sample(step, batch))
         dt = time.perf_counter() - t0
-        return eng, state, steps / dt, loss
+        coll_bytes = (eng.substrate.coordinator_bytes(COLLECTIVE_TAGS)
+                      - bytes0) if substrate == "multiproc" else 0
+        return eng, state, steps / dt, loss, coll_bytes
 
-    lb_eng, lb_state, lb_sps, lb_loss = run("loopback")
-    mp_eng, mp_state, mp_sps, mp_loss = run("multiproc")
-    try:
-        exported_lb = lb_eng.export_state(lb_state)
-        exported_mp = mp_eng.export_state(mp_state)
+    def export_err(ref, exported):
         err = 0.0
         for part in ("p", "m", "v"):
             err = max(err, max(jax.tree.leaves(jax.tree.map(
                 lambda a, b: float(jnp.abs(jnp.asarray(a) -
                                            jnp.asarray(b)).max()),
-                exported_lb[part], exported_mp[part]))))
+                ref[part], exported[part]))))
+        return err
 
-        out = [
-            {"substrate": "loopback", "steps_per_s": round(lb_sps, 3),
-             "loss": round(lb_loss, 4), "note": "serial in-process fleet"},
-            {"substrate": "multiproc", "steps_per_s": round(mp_sps, 3),
-             "loss": round(mp_loss, 4),
-             "note": f"{plan.n} rank processes, "
-                     f"{mp_eng.substrate.stats['all_gather']} AG / "
-                     f"{mp_eng.substrate.stats['reduce_scatter']} RS events"},
-        ]
-        for rank, wall in sorted(mp_eng.last_step_walls.items()):
-            out.append({"substrate": f"rank{rank}_wall",
-                        "step_ms": round(wall * 1e3, 2),
-                        "note": "worker-measured fwd+bwd step wall-clock"})
-        out.append({"substrate": "parity",
-                    "max_abs_err": err,
-                    "note": "params+moments after identical steps "
-                            "(0.0 = bitwise)"})
-    finally:
-        mp_eng.close()
+    lb_eng, lb_state, lb_sps, lb_loss, _ = run("loopback")
+    ref = lb_eng.export_state(lb_state)
+    n_rounds = steps * len(lb_eng.schedule.chunks(max(plan.ell_pad, 1)))
+    out = [{"substrate": "loopback", "steps_per_s": round(lb_sps, 3),
+            "loss": round(lb_loss, 4),
+            "note": "serial in-process fleet (reference)"}]
+    for topo in topologies:
+        eng, state, sps, loss, coll_bytes = run("multiproc", topology=topo)
+        try:
+            err = export_err(ref, eng.export_state(state))
+            out.append({
+                "substrate": f"multiproc/{topo}",
+                "steps_per_s": round(sps, 3), "loss": round(loss, 4),
+                "coordinator_kib_per_round":
+                    round(coll_bytes / max(n_rounds, 1) / 1024, 1),
+                "max_abs_err_vs_loopback": err,
+                "note": f"{plan.n} rank processes, "
+                        f"{eng.substrate.stats['all_gather']} AG / "
+                        f"{eng.substrate.stats['reduce_scatter']} RS "
+                        "events (0.0 err = bitwise)"})
+            for rank, wall in sorted(eng.last_step_walls.items()):
+                out.append({"substrate": f"  {topo} rank{rank}_wall",
+                            "step_ms": round(wall * 1e3, 2),
+                            "note": "worker-measured fwd+bwd wall-clock"})
+        finally:
+            eng.close()
     return out
 
 
 def main() -> None:
-    out = rows()
+    from repro.core.engine.transport import TOPOLOGIES
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default="both",
+                    choices=list(TOPOLOGIES) + ["both"])
+    ap.add_argument("--nprocs", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--schedule", default="layered")
+    args = ap.parse_args()
+    topologies = tuple(TOPOLOGIES) if args.topology == "both" \
+        else (args.topology,)
+    out = rows(nprocs=args.nprocs, seq=args.seq, steps=args.steps,
+               schedule=args.schedule, topologies=topologies)
     w = max(len(str(r["substrate"])) for r in out)
     for r in out:
         extras = {k: v for k, v in r.items()
                   if k not in ("substrate", "note")}
         kv = "  ".join(f"{k}={v}" for k, v in extras.items())
-        print(f"{r['substrate']:<{w}}  {kv:<40}  {r['note']}")
-    err = next(r for r in out if r["substrate"] == "parity")["max_abs_err"]
-    if err > 1e-6:
-        raise SystemExit(f"FAIL: cross-substrate parity error {err}")
-    print("PASS: multiproc matches loopback")
+        print(f"{r['substrate']:<{w}}  {kv:<60}  {r['note']}")
+    worst = max((r["max_abs_err_vs_loopback"] for r in out
+                 if "max_abs_err_vs_loopback" in r), default=0.0)
+    if worst > 0.0:
+        raise SystemExit(f"FAIL: cross-substrate parity error {worst}")
+    if "ring" in topologies:
+        ring_kib = next(r["coordinator_kib_per_round"] for r in out
+                        if r["substrate"] == "multiproc/ring")
+        if ring_kib > 1.0:
+            raise SystemExit(
+                f"FAIL: ring coordinator moved {ring_kib} KiB/round of "
+                "collective payload (expected ~0: control plane only)")
+    print("PASS: multiproc matches loopback bitwise"
+          + (" and the ring coordinator is control-plane only"
+             if "ring" in topologies else ""))
 
 
 if __name__ == "__main__":

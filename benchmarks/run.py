@@ -63,9 +63,9 @@ def main() -> None:
             ("table5_cluster_b", T.table5_cluster_b,
              lambda rows: f"rows={len(rows)}"),
             ("multiproc_throughput", multiproc_throughput.rows,
-             lambda rows: "parity_err=" + str(next(
-                 r["max_abs_err"] for r in rows
-                 if r["substrate"] == "parity"))),
+             lambda rows: "parity_err=" + str(max(
+                 r["max_abs_err_vs_loopback"] for r in rows
+                 if "max_abs_err_vs_loopback" in r))),
             ("fig8_measured_hlo", grad_accum.measured_collective_bytes,
              lambda rows: f"rs_ratio={rows[-1].get('reducescatter_count', '?')}"),
             ("appc_measured_hlo", uneven_overhead.measured_hlo_overhead,

@@ -25,8 +25,10 @@ for them (DESIGN.md §Engine):
 * :mod:`repro.core.engine.multiproc` — **MultiProcessSubstrate /
   ProcessEngine**: the loopback surface across real OS process
   boundaries (one spawned worker per rank, AllGatherv/ReduceScatterv
-  over :mod:`repro.core.engine.transport`), plus **WallClockOracle**,
-  the real-measurement telemetry source for the elastic loop
+  over :mod:`repro.core.engine.transport`, hub or peer-to-peer ring
+  topology — the ragged ring algorithms live in
+  :mod:`repro.core.engine.ring`), plus **WallClockOracle**, the
+  real-measurement telemetry source for the elastic loop
   (docs/multiproc.md).
 * :mod:`repro.core.engine.api` — ``build_train_step(cfg, plan,
   schedule=..., substrate=...)``: one entry point that returns a uniform

@@ -20,11 +20,13 @@ identical (Eq. 1), which `tests/test_engine.py` asserts numerically.
   unpadded ``(ell_i, m_i)`` shapes and software loopback collectives;
   runs on a single device.
 * ``substrate="multiproc"`` — the MPMD runtime across real OS process
-  boundaries: one worker process per rank, host-coordinated AllGatherv /
-  ReduceScatterv (:mod:`repro.core.engine.multiproc`), numerically
-  matching loopback step for step.  Engines on this substrate own worker
-  fleets — call :meth:`TrainEngine.close` (or use the engine as a
-  context manager) when done.
+  boundaries: one worker process per rank, AllGatherv / ReduceScatterv
+  through the coordinator (``topology="hub"``) or peer-to-peer over
+  worker↔worker ring channels (``topology="ring"``,
+  :mod:`repro.core.engine.multiproc`), bitwise-matching loopback step
+  for step either way.  Engines on this substrate own worker fleets —
+  call :meth:`TrainEngine.close` (or use the engine as a context
+  manager) when done.
 """
 
 from __future__ import annotations
@@ -208,9 +210,14 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
 
     ``schedule`` — any name in :func:`repro.core.engine.list_schedules`
     (or a :class:`Schedule` instance).  ``substrate`` — ``"shard_map"``,
-    ``"loopback"``, or ``"auto"`` (shard_map iff enough devices exist for
-    the plan).  Extra ``knobs`` (``gather_dtype``, ``remat``, ``unroll``,
-    ``state_axes``, ...) are forwarded to the SPMD program.
+    ``"loopback"``, ``"multiproc"``, or ``"auto"`` (shard_map iff enough
+    devices exist for the plan).  Extra ``knobs`` (``gather_dtype``,
+    ``remat``, ``unroll``, ``state_axes``, ...) are forwarded to the
+    SPMD program; the multiproc substrate takes ``transport=``,
+    ``topology=`` (``"hub"``/``"ring"``), ``ring_timeout=``,
+    ``reply_timeout=``, ``jax_coordinator=``.  With ``elastic=`` the
+    knobs are captured and re-applied on every replan rebuild, so e.g.
+    a ring fleet replans into a ring fleet.
 
     ``elastic`` — an :class:`repro.core.engine.elastic.ElasticConfig`
     (or ``True`` for defaults) returns an

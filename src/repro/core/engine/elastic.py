@@ -313,6 +313,9 @@ class ElasticEngine(TrainEngine):
 
     def _rebuild(self, new_cm: ClusterCostModel, new_plan: Plan,
                  state: Any) -> Any:
+        # _mk captures every substrate knob (schedule, transport, the
+        # hub/ring topology, timeouts), so a replan rebuilds the fleet
+        # with the same wiring it had — a ring fleet stays a ring fleet.
         new_engine = build_train_step(self.cfg, new_plan, **self._mk)
         state = migrate_state(self.engine, state, new_engine)
         self.engine.close()     # release the old plan's worker fleet

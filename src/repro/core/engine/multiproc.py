@@ -13,11 +13,24 @@ boundaries:
   ∝ r_i, the paper's memory-balancing claim, now per *process*), builds
   its own jit programs, and applies Adam locally (ZeRO-3).
 * **MultiProcessSubstrate** — the ``LoopbackSubstrate`` surface with a
-  real data plane: AllGatherv collects every worker's ragged shard
-  slices and reassembles full flat unit buffers; ReduceScatterv sums
-  the workers' full gradient buffers (fixed rank order, so the float
-  accumulation is bit-identical to loopback's) and returns each rank
-  its slice.  Bytes move over :mod:`repro.core.engine.transport`
+  real data plane, in one of two topologies
+  (``CEPHALO_MP_TOPOLOGY=hub|ring`` or the ``topology=`` knob):
+
+  - ``hub`` — AllGatherv collects every worker's ragged shard slices at
+    the coordinator and reassembles full flat unit buffers;
+    ReduceScatterv sums the workers' full gradient buffers (fixed rank
+    order, so the float accumulation is bit-identical to loopback's)
+    and returns each rank its slice.  O(N·total_bytes) per round at the
+    coordinator.
+  - ``ring`` — workers exchange the same payloads peer-to-peer over
+    worker↔worker ring channels (:mod:`repro.core.engine.ring`): N−1
+    steps per collective, each rank forwarding its neighbor's chunk,
+    reductions applied accumulate-then-combine in fixed rank order so
+    the results stay bitwise-identical to hub and loopback.  The
+    coordinator shrinks to a control plane (round orchestration,
+    telemetry, lifecycle) — its per-round data-plane bytes drop to ~0.
+
+  Either way bytes move over :mod:`repro.core.engine.transport`
   (shared-memory arenas or the socket pair).
 * **WallClockOracle** — the real-measurement latency source the elastic
   runtime (:mod:`repro.core.engine.elastic`) was designed to plug in:
@@ -54,10 +67,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.engine import ring
 from repro.core.engine.api import TrainEngine
 from repro.core.engine.schedules import Schedule
 from repro.core.engine.substrate import LoopbackSubstrate
-from repro.core.engine.transport import Channel, resolve_transport
+from repro.core.engine.transport import (Channel, resolve_topology,
+                                         resolve_transport)
 from repro.core.engine.units import UnitPlanner, normalized_ratios
 from repro.core.partition import Plan
 from repro.optim.adam import AdamConfig, adam_update
@@ -65,6 +80,23 @@ from repro.optim.adam import AdamConfig, adam_update
 #: default seconds to wait for a worker reply before declaring it hung.
 #: first replies include jax import + jit compile, so this is generous.
 REPLY_TIMEOUT = 600.0
+
+#: default bounded wait for one ring-step receive between workers.  A
+#: ring peer that produces nothing within this window is declared hung
+#: (a dead peer is detected much sooner via EOF on its channel) — the
+#: bounded wait is what turns a mid-collective worker death into a
+#: clear RuntimeError naming the rank and phase instead of a hang.
+#: Matches REPLY_TIMEOUT: a healthy neighbor may legitimately spend a
+#: first-step jit compile between the round's allgather and its
+#: reduce-scatter, so the ring wait needs the same generous budget.
+RING_TIMEOUT = REPLY_TIMEOUT
+
+#: coordinator message tags whose array payloads are collective data
+#: plane traffic (vs control / lifecycle).  Request tags and their
+#: array-carrying reply tags both appear; the throughput benchmark sums
+#: these to show hub-vs-ring bytes through the coordinator.
+COLLECTIVE_TAGS = ("get_state", "state", "round", "grads", "grad_accum",
+                   "ring_round")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,17 +118,110 @@ class WorkerSpec:
     transport: str
     n_ranks: int
     jax_coordinator: Optional[str] = None
+    topology: str = "hub"
+    ring_timeout: float = RING_TIMEOUT
 
 
 # ---------------------------------------------------------------------------
 # Worker side
 # ---------------------------------------------------------------------------
 
+class _RingLinks:
+    """One worker's two ring channels + the one-step exchange protocol.
+
+    Each ring edge ``r → (r+1) mod n`` is a dedicated duplex pipe:
+    payloads flow forward (``ring`` messages, arrays on the configured
+    data plane), acknowledgements flow backward (``ring_ack``, header
+    only).  The ack is what makes the shared-memory arena safe to reuse
+    — a sender never writes its next payload before the receiver has
+    copied the previous one out.
+
+    Deadlock avoidance on the pipe plane (where a large ``send`` can
+    block until the peer drains it): even ranks send-then-receive, odd
+    ranks receive-then-send.  Any cycle of blocked senders would have to
+    span the whole ring, and rank 1 (receive-first) breaks it; for the
+    all-even corner (n == 1) there are no edges at all.
+
+    Receives are *bounded* (``spec.ring_timeout``): a peer that goes
+    silent mid-collective surfaces as a RuntimeError naming the peer
+    rank and the collective phase instead of hanging the fleet.
+    """
+
+    def __init__(self, rank: int, n: int, prev_ch: Channel,
+                 next_ch: Channel, timeout: float):
+        self.rank, self.n = rank, n
+        self.prev_rank, self.next_rank = ring.ring_neighbors(n, rank)
+        self.prev_ch, self.next_ch = prev_ch, next_ch
+        self.timeout = timeout
+
+    def run(self, gen, phase: str):
+        """Drive one ring collective generator over the real channels."""
+        return ring.drive(
+            gen, lambda step, payload: self._exchange(phase, step, payload))
+
+    def _exchange(self, phase: str, step: int,
+                  payload: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        meta = {"phase": phase, "step": step, "src": self.rank}
+        try:
+            if self.rank % 2 == 0:
+                self._send(meta, payload)
+                received = self._recv(phase, step)
+                self.prev_ch.send("ring_ack", meta)
+                self._recv_ack(phase, step)
+            else:
+                received = self._recv(phase, step)
+                self.prev_ch.send("ring_ack", meta)
+                self._send(meta, payload)
+                self._recv_ack(phase, step)
+        except (EOFError, OSError) as e:
+            raise RuntimeError(
+                f"ring {phase} step {step}: rank {self.rank} lost peer "
+                f"(prev rank {self.prev_rank} / next rank "
+                f"{self.next_rank}): {e!r}") from e
+        return received
+
+    def _send(self, meta: dict, payload: Dict[str, np.ndarray]) -> None:
+        self.next_ch.send("ring", meta, payload)
+
+    def _recv(self, phase: str, step: int) -> Dict[str, np.ndarray]:
+        tag, meta, arrays = self._bounded_recv(self.prev_ch, phase, step,
+                                               self.prev_rank)
+        if tag != "ring" or meta.get("step") != step:
+            raise RuntimeError(
+                f"ring {phase} step {step}: rank {self.rank} got "
+                f"out-of-protocol message {tag!r} (meta {meta}) from "
+                f"rank {self.prev_rank}")
+        return arrays
+
+    def _recv_ack(self, phase: str, step: int) -> None:
+        tag, meta, _ = self._bounded_recv(self.next_ch, phase, step,
+                                          self.next_rank)
+        if tag != "ring_ack" or meta.get("step") != step:
+            raise RuntimeError(
+                f"ring {phase} step {step}: rank {self.rank} expected "
+                f"ack from rank {self.next_rank}, got {tag!r}")
+
+    def _bounded_recv(self, ch: Channel, phase: str, step: int, peer: int):
+        try:
+            return ch.recv(timeout=self.timeout)
+        except TimeoutError as e:
+            raise RuntimeError(
+                f"ring {phase} step {step}: rank {self.rank} timed out "
+                f"after {self.timeout:.0f}s waiting for rank {peer}"
+                ) from e
+
+    def close(self) -> None:
+        self.prev_ch.close()
+        self.next_ch.close()
+
+
 class _Worker:
     """Per-process rank runtime: state shard + jit programs + timers."""
 
-    def __init__(self, spec: WorkerSpec):
+    def __init__(self, spec: WorkerSpec,
+                 ring_links: Optional[_RingLinks] = None):
         self.spec = spec
+        self.ring_links = ring_links
         self.sub = LoopbackSubstrate(UnitPlanner(spec.cfg,
                                                  list(spec.ratios)))
         self.state: Dict[str, Dict[str, np.ndarray]] = {}
@@ -105,6 +230,7 @@ class _Worker:
         self.labels: Optional[np.ndarray] = None
         self.w_val = 0.0
         self.slowdown = 1.0
+        self.die_next_round = False
         self._grad_fn = None
         self._compiled_rows: set = set()
         self._probe_cache: Dict[Tuple[str, int], Callable] = {}
@@ -147,6 +273,15 @@ class _Worker:
 
     def round(self, lo: int, hi: int,
               flats: Dict[str, np.ndarray]) -> Tuple[dict, dict]:
+        """Hub round: fwd+bwd over [lo, hi) on coordinator-fed params,
+        gradient flats returned to the coordinator for the rank-order
+        sum."""
+        meta, gflats = self._compute_round(lo, hi, flats)
+        return meta, {f"G|{u}": f for u, f in gflats.items()}
+
+    def _compute_round(self, lo: int, hi: int,
+                       flats: Dict[str, np.ndarray]
+                       ) -> Tuple[dict, Dict[str, np.ndarray]]:
         """Fwd+bwd over microbatch indices [lo, hi) ∩ [0, ell).
 
         Returns (meta, grad flats): meta carries the loss contribution
@@ -157,7 +292,7 @@ class _Worker:
         """
         ell, m = self.spec.ell, self.spec.m
         lo, hi = min(lo, ell), min(hi, ell)
-        if hi <= lo or m == 0:
+        if hi <= lo or m == 0 or self.tokens is None:
             return {"loss": 0.0, "n_mb": 0, "t_wall": 0.0}, {}
         params = self.sub.unflatten_flats(flats)
         rows = slice(lo * m, hi * m)
@@ -182,7 +317,53 @@ class _Worker:
         gflats = self.sub.flatten_tree(jax.tree.map(np.asarray, grads))
         meta = {"loss": float(loss), "n_mb": hi - lo,
                 "t_wall": t_wall * self.slowdown}
-        return meta, {f"G|{u}": f for u, f in gflats.items()}
+        return meta, {u: np.asarray(f) for u, f in gflats.items()}
+
+    def ring_round(self, meta: dict) -> dict:
+        """One collective round entirely on the peer-to-peer ring.
+
+        The coordinator sent only control (``lo``/``hi`` plus the active
+        rank set); params come from a ring AllGatherv of every worker's
+        own state chunks, gradients leave through a ring ReduceScatterv
+        whose per-destination contributions are combined in fixed rank
+        order (:func:`repro.core.engine.ring.combine_fixed_order`), so
+        the round sum is bitwise-identical to the hub coordinator's.
+        Ranks outside the active set still forward ring traffic and
+        still collect their gradient slice (they own state and run Adam
+        too).
+        """
+        lo, hi = int(meta["lo"]), int(meta["hi"])
+        active = set(meta["active"])
+        rank, n = self.spec.rank, self.spec.n_ranks
+        links = self.ring_links
+        own = {g.name: np.asarray(self.state[g.name]["p"])
+               for g in self.sub.planner.groups}
+        phase = f"allgather(p)[{lo},{hi})"
+        if links is None:
+            if n != 1:
+                raise RuntimeError(
+                    f"rank {rank}: ring round without ring links (n={n})")
+            got = ring.drive(ring.allgatherv(rank, n, own), None)
+        else:
+            got = links.run(ring.allgatherv(rank, n, own), phase)
+        out_meta = {"loss": 0.0, "n_mb": 0, "t_wall": 0.0}
+        dest_chunks = None
+        if rank in active:
+            flats = self.sub.concat_slices(got, key=None)
+            out_meta, gflats = self._compute_round(lo, hi, flats)
+            if gflats:
+                dest_chunks = self.sub.slice_flats(gflats)
+        phase = f"reduce_scatter(G)[{lo},{hi})"
+        if links is None:
+            collected = ring.drive(
+                ring.reduce_scatterv(rank, n, dest_chunks), None)
+        else:
+            collected = links.run(
+                ring.reduce_scatterv(rank, n, dest_chunks), phase)
+        round_sum = ring.combine_fixed_order(collected)
+        if round_sum is not None:
+            self.accum_grads(round_sum)
+        return out_meta
 
     def accum_grads(self, arrays: Dict[str, np.ndarray]) -> None:
         sl = {k: np.asarray(v) for k, v in arrays.items()}
@@ -255,7 +436,8 @@ class _Worker:
         return fn
 
 
-def _worker_main(spec: WorkerSpec, conn) -> None:
+def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
+                 ring_next=None) -> None:
     """Entry point of one spawned rank process."""
     channel = Channel(conn, transport=spec.transport)
     channel.send("ready", {"pid": os.getpid(), "rank": spec.rank})
@@ -266,7 +448,13 @@ def _worker_main(spec: WorkerSpec, conn) -> None:
                                        process_id=spec.rank)
         except Exception:
             pass
-    worker = _Worker(spec)
+    links = None
+    if ring_prev is not None and ring_next is not None:
+        links = _RingLinks(spec.rank, spec.n_ranks,
+                           Channel(ring_prev, transport=spec.transport),
+                           Channel(ring_next, transport=spec.transport),
+                           timeout=spec.ring_timeout)
+    worker = _Worker(spec, ring_links=links)
     while True:
         try:
             tag, meta, arrays = channel.recv()
@@ -286,10 +474,22 @@ def _worker_main(spec: WorkerSpec, conn) -> None:
                 worker.begin_step(meta, arrays)
                 channel.send("ok")
             elif tag == "round":
+                if worker.die_next_round:   # injected mid-collective death
+                    os._exit(17)
                 out_meta, out_arrays = worker.round(
                     meta["lo"], meta["hi"],
                     {k.split("|", 1)[1]: v for k, v in arrays.items()})
                 channel.send("grads", out_meta, out_arrays)
+            elif tag == "ring_round":
+                if worker.die_next_round:   # injected mid-collective death
+                    os._exit(17)
+                channel.send("ring_done", worker.ring_round(meta))
+            elif tag == "fault":
+                # fault injection for the bounded-wait tests: die the
+                # instant the next collective round arrives, so peers
+                # and coordinator observe a mid-collective death.
+                worker.die_next_round = meta.get("mode") == "die_next_round"
+                channel.send("ok")
             elif tag == "grad_accum":
                 worker.accum_grads(arrays)
                 channel.send("ok")
@@ -309,6 +509,8 @@ def _worker_main(spec: WorkerSpec, conn) -> None:
                              {"traceback": f"unknown command {tag!r}"})
         except Exception:   # noqa: BLE001 - forwarded to coordinator
             channel.send("error", {"traceback": traceback.format_exc()})
+    if links is not None:
+        links.close()
     channel.close()
 
 
@@ -329,24 +531,42 @@ class MultiProcessSubstrate(LoopbackSubstrate):
 
     def __init__(self, planner: UnitPlanner, specs: Sequence[WorkerSpec],
                  start_method: str = "spawn",
-                 reply_timeout: float = REPLY_TIMEOUT):
+                 reply_timeout: float = REPLY_TIMEOUT,
+                 topology: str = "hub"):
         super().__init__(planner)
         self.reply_timeout = reply_timeout
+        self.topology = resolve_topology(topology)
         self.procs: List[mp.process.BaseProcess] = []
         self.channels: List[Channel] = []
         ctx = mp.get_context(start_method)
+        n = len(specs)
+        # peer-to-peer data plane: one dedicated duplex pipe per ring
+        # edge r → (r+1) mod n; rank r gets edge r's head end as its
+        # "next" channel and edge (r-1) mod n's tail end as its "prev".
+        ring_edges = []
+        if self.topology == "ring" and n > 1:
+            ring_edges = [ctx.Pipe(duplex=True) for _ in range(n)]
         try:
             for spec in specs:
                 parent, child = ctx.Pipe(duplex=True)
-                proc = ctx.Process(target=_worker_main, args=(spec, child),
+                args: Tuple = (spec, child)
+                if ring_edges:
+                    r = spec.rank
+                    args = (spec, child, ring_edges[(r - 1) % n][1],
+                            ring_edges[r][0])
+                proc = ctx.Process(target=_worker_main, args=args,
                                    daemon=True, name=f"cephalo-rank{spec.rank}")
                 proc.start()
                 child.close()
                 self.procs.append(proc)
                 self.channels.append(Channel(parent,
                                              transport=spec.transport))
+            for head, tail in ring_edges:
+                # the workers own the ring ends now; drop our copies
+                head.close()
+                tail.close()
             for rank in range(self.n):
-                tag, meta, _ = self._recv(rank)
+                tag, meta, _ = self._recv(rank, phase="startup")
                 if tag != "ready":
                     raise RuntimeError(
                         f"rank {rank} failed to start: {tag} {meta}")
@@ -355,31 +575,50 @@ class MultiProcessSubstrate(LoopbackSubstrate):
             raise
 
     # --- messaging ------------------------------------------------------
-    def _recv(self, rank: int) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+    def _recv(self, rank: int, phase: str = ""
+              ) -> Tuple[str, dict, Dict[str, np.ndarray]]:
         proc = self.procs[rank]
+        where = f" during {phase}" if phase else ""
         try:
             tag, meta, arrays = self.channels[rank].recv(
                 timeout=self.reply_timeout, alive=proc.is_alive)
         except EOFError as e:
             raise RuntimeError(
-                f"rank {rank} worker died (exitcode "
+                f"rank {rank} worker died{where} (exitcode "
                 f"{proc.exitcode})") from e
+        except TimeoutError as e:
+            raise RuntimeError(
+                f"rank {rank} worker gave no reply{where} within "
+                f"{self.reply_timeout:.0f}s") from e
         if tag == "error":
             raise RuntimeError(
-                f"rank {rank} worker error:\n{meta.get('traceback')}")
+                f"rank {rank} worker error{where}:\n"
+                f"{meta.get('traceback')}")
         return tag, meta, arrays
 
+    def _send(self, rank: int, tag: str, meta: Optional[dict],
+              arrays: Optional[Dict[str, np.ndarray]],
+              phase: str = "") -> None:
+        where = f" during {phase}" if phase else ""
+        try:
+            self.channels[rank].send(tag, meta, arrays)
+        except (OSError, EOFError) as e:
+            raise RuntimeError(
+                f"rank {rank} worker unreachable{where} (exitcode "
+                f"{self.procs[rank].exitcode}): {e!r}") from e
+
     def request(self, rank: int, tag: str, meta: Optional[dict] = None,
-                arrays: Optional[Dict[str, np.ndarray]] = None
-                ) -> Tuple[dict, Dict[str, np.ndarray]]:
+                arrays: Optional[Dict[str, np.ndarray]] = None,
+                phase: str = "") -> Tuple[dict, Dict[str, np.ndarray]]:
         """One strict request→reply exchange with one worker."""
-        self.channels[rank].send(tag, meta, arrays)
-        _, r_meta, r_arrays = self._recv(rank)
+        self._send(rank, tag, meta, arrays, phase=phase or tag)
+        _, r_meta, r_arrays = self._recv(rank, phase=phase or tag)
         return r_meta, r_arrays
 
     def request_all(self, tag: str, metas: Optional[List[dict]] = None,
                     arrays: Optional[List[Optional[dict]]] = None,
-                    ranks: Optional[Sequence[int]] = None
+                    ranks: Optional[Sequence[int]] = None,
+                    phase: str = ""
                     ) -> List[Tuple[dict, Dict[str, np.ndarray]]]:
         """Fan a request out to ``ranks`` (default: all) and collect the
         replies **in rank order** — the fixed order every reduction uses,
@@ -387,14 +626,30 @@ class MultiProcessSubstrate(LoopbackSubstrate):
         rank-major accumulation exactly."""
         ranks = list(ranks) if ranks is not None else list(range(self.n))
         for i, rank in enumerate(ranks):
-            self.channels[rank].send(
-                tag, metas[i] if metas else None,
-                arrays[i] if arrays else None)
+            self._send(rank, tag, metas[i] if metas else None,
+                       arrays[i] if arrays else None,
+                       phase=phase or tag)
         out = []
         for rank in ranks:
-            _, meta, arrs = self._recv(rank)
+            _, meta, arrs = self._recv(rank, phase=phase or tag)
             out.append((meta, arrs))
         return out
+
+    # --- data-plane accounting -----------------------------------------
+    def coordinator_bytes(self, tags: Optional[Sequence[str]] = None
+                          ) -> int:
+        """Array-payload bytes moved over coordinator↔worker channels
+        (both directions), optionally restricted to ``tags`` (e.g.
+        :data:`COLLECTIVE_TAGS`).  Ring-topology rounds keep this at
+        zero — the collectives move peer-to-peer."""
+        want = set(tags) if tags is not None else None
+        total = 0
+        for ch in self.channels:
+            for counts in (ch.array_bytes_out, ch.array_bytes_in):
+                for tag, nbytes in counts.items():
+                    if want is None or tag in want:
+                        total += nbytes
+        return total
 
     # --- collectives ----------------------------------------------------
     def gather_flat(self, key: str) -> Dict[str, np.ndarray]:
@@ -402,7 +657,8 @@ class MultiProcessSubstrate(LoopbackSubstrate):
         unit buffers on the coordinator."""
         self.stats["all_gather"] += 1
         replies = self.request_all("get_state",
-                                   metas=[{"parts": [key]}] * self.n)
+                                   metas=[{"parts": [key]}] * self.n,
+                                   phase=f"allgatherv({key})")
         slices = [{g.name: arrs[f"{g.name}|{key}"]
                    for g in self.planner.groups}
                   for _, arrs in replies]
@@ -423,7 +679,8 @@ class MultiProcessSubstrate(LoopbackSubstrate):
         self.stats["reduce_scatter"] += 1
         slices = self.slice_flats(sums)
         self.request_all("grad_accum",
-                         arrays=[slices[r] for r in range(self.n)])
+                         arrays=[slices[r] for r in range(self.n)],
+                         phase="reduce_scatterv(G)")
 
     # --- lifecycle ------------------------------------------------------
     def close(self) -> None:
@@ -458,8 +715,10 @@ class ProcessEngine(TrainEngine):
     def __init__(self, cfg: ArchConfig, plan: Plan, schedule: Schedule,
                  adam: AdamConfig, seq_len: int, *,
                  transport: Optional[str] = None,
+                 topology: Optional[str] = None,
                  start_method: str = "spawn",
                  reply_timeout: float = REPLY_TIMEOUT,
+                 ring_timeout: float = RING_TIMEOUT,
                  jax_coordinator: Optional[str] = None):
         if not plan.feasible:
             raise ValueError(plan.infeasible_reason)
@@ -467,17 +726,20 @@ class ProcessEngine(TrainEngine):
         self.adam, self.seq = adam, seq_len
         self.n = plan.n
         transport = resolve_transport(transport)
+        self.topology = resolve_topology(topology)
         ratios = normalized_ratios(plan.state_ratios())
         self.planner = UnitPlanner(cfg, ratios)
         specs = [WorkerSpec(rank=r.rank, cfg=cfg,
                             ratios=tuple(float(x) for x in ratios),
                             m=r.m, ell=r.ell, seq=seq_len, adam=adam,
                             transport=transport, n_ranks=plan.n,
-                            jax_coordinator=jax_coordinator)
+                            jax_coordinator=jax_coordinator,
+                            topology=self.topology,
+                            ring_timeout=ring_timeout)
                  for r in plan.ranks]
         self.substrate = MultiProcessSubstrate(
             self.planner, specs, start_method=start_method,
-            reply_timeout=reply_timeout)
+            reply_timeout=reply_timeout, topology=self.topology)
         #: rank -> (m, fwd_layer_s, bwd_layer_s): one timed single-layer
         #: pass per active rank at each step's end (sequential, so the
         #: measurements don't contend) — the WallClockOracle's
@@ -513,9 +775,12 @@ class ProcessEngine(TrainEngine):
         """One training iteration, schedule-driven, across the fleet.
 
         Round structure and reduction order are identical to the
-        loopback step (rank-major float accumulation), so the two
-        substrates agree numerically; the microbatch work itself runs
-        concurrently in the rank processes.
+        loopback step (rank-major float accumulation) on **both**
+        topologies, so every substrate agrees numerically; the
+        microbatch work itself runs concurrently in the rank processes.
+        On the ``ring`` topology the coordinator's part of each round is
+        control-plane only — one ``ring_round`` broadcast and per-rank
+        meta replies; params and gradients move worker↔worker.
         """
         t_step0 = time.perf_counter()
         big = np.asarray(big)
@@ -541,7 +806,7 @@ class ProcessEngine(TrainEngine):
                 f"global_batch {plan.global_batch}")
         self.substrate.request_all(
             "step_begin", metas=[{"w_val": w_val}] * len(active),
-            arrays=payloads, ranks=active)
+            arrays=payloads, ranks=active, phase="step_begin")
 
         total_loss = 0.0
         any_grads = False
@@ -549,34 +814,22 @@ class ProcessEngine(TrainEngine):
         n_mb = {r: 0 for r in active}
         mb_off = 0
         for size in self.schedule.chunks(max(plan.ell_pad, 1)):
-            flats = self.substrate.gather_flat("p")         # AllGatherv
             lo, hi = mb_off, mb_off + size
             mb_off += size
             rnd = [r.rank for r in plan.ranks
                    if r.b > 0 and min(lo, r.ell) < min(hi, r.ell)]
-            if not rnd:
+            if self.topology == "ring":
+                round_metas = self._ring_collective_round(lo, hi, rnd)
+            else:
+                round_metas = self._hub_collective_round(lo, hi, rnd)
+            if round_metas is None:
                 continue
-            p_arrays = {f"P|{u}": f for u, f in flats.items()}
-            replies = self.substrate.request_all(
-                "round", metas=[{"lo": lo, "hi": hi}] * len(rnd),
-                arrays=[p_arrays] * len(rnd), ranks=rnd)
-            sums: Optional[Dict[str, np.ndarray]] = None
-            for rank, (meta, arrs) in zip(rnd, replies):
+            for rank, meta in round_metas:
                 if meta["n_mb"] == 0:
                     continue
                 total_loss += meta["loss"]
                 walls[rank] += meta["t_wall"]
                 n_mb[rank] += meta["n_mb"]
-                g = {k.split("|", 1)[1]: v for k, v in arrs.items()}
-                if sums is None:
-                    sums = {u: np.array(v, dtype=np.float32)
-                            for u, v in g.items()}
-                else:
-                    for u in sums:
-                        sums[u] += g[u]
-            if sums is None:
-                continue
-            self.substrate.scatter_grad_flats(sums)         # ReduceScatterv
             any_grads = True
         if not any_grads:
             # zero-gradient step (every active rank has ell_i == 0):
@@ -597,6 +850,58 @@ class ProcessEngine(TrainEngine):
             for r in active if n_mb[r] > 0}
         self.last_step_wall_s = time.perf_counter() - t_step0
         return {"step": step_no}, total_loss
+
+    # --- per-round collective dispatch ---------------------------------
+    def _hub_collective_round(self, lo: int, hi: int,
+                              rnd: List[int]
+                              ) -> Optional[List[Tuple[int, dict]]]:
+        """Hub topology: the coordinator IS the data plane — gather all
+        param slices, broadcast full flats, sum the returned gradient
+        flats in fixed rank order, scatter the slices back."""
+        flats = self.substrate.gather_flat("p")             # AllGatherv
+        if not rnd:
+            return None
+        p_arrays = {f"P|{u}": f for u, f in flats.items()}
+        replies = self.substrate.request_all(
+            "round", metas=[{"lo": lo, "hi": hi}] * len(rnd),
+            arrays=[p_arrays] * len(rnd), ranks=rnd,
+            phase=f"round[{lo},{hi})")
+        sums: Optional[Dict[str, np.ndarray]] = None
+        out = []
+        for rank, (meta, arrs) in zip(rnd, replies):
+            out.append((rank, meta))
+            if meta["n_mb"] == 0:
+                continue
+            g = {k.split("|", 1)[1]: v for k, v in arrs.items()}
+            if sums is None:
+                sums = {u: np.array(v, dtype=np.float32)
+                        for u, v in g.items()}
+            else:
+                for u in sums:
+                    sums[u] += g[u]
+        if sums is None:
+            return None
+        self.substrate.scatter_grad_flats(sums)             # ReduceScatterv
+        return out
+
+    def _ring_collective_round(self, lo: int, hi: int,
+                               rnd: List[int]
+                               ) -> Optional[List[Tuple[int, dict]]]:
+        """Ring topology: control-plane only — every worker (active or
+        not: inactive ranks still forward ring traffic and still own a
+        gradient slice) runs the round's ring AllGatherv + ring
+        ReduceScatterv peer-to-peer and replies with telemetry meta.
+        The collective event counters mirror the hub/loopback structure
+        so round-structure assertions stay substrate-independent."""
+        self.substrate.stats["all_gather"] += 1
+        if not rnd:
+            return None
+        meta = {"lo": lo, "hi": hi, "active": list(rnd)}
+        replies = self.substrate.request_all(
+            "ring_round", metas=[meta] * self.n,
+            phase=f"ring round[{lo},{hi})")
+        self.substrate.stats["reduce_scatter"] += 1
+        return [(rank, r_meta) for rank, (r_meta, _) in enumerate(replies)]
 
     def gather_params(self, state) -> Dict[str, Any]:
         return self.substrate.allgather_params(None, "p")
@@ -632,6 +937,16 @@ class ProcessEngine(TrainEngine):
         if not 0 <= rank < self.n:
             raise ValueError(f"rank {rank} out of range for n={self.n}")
         self.substrate.request(rank, "slowdown", {"factor": float(factor)})
+
+    def inject_death(self, rank: int) -> None:
+        """Fault injection: the rank process exits the moment the next
+        collective round reaches it — mid-collective from every other
+        participant's point of view.  The step must then raise a
+        RuntimeError naming the dead rank and the phase (bounded waits,
+        no hang); the fleet is unusable afterwards except for close()."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} out of range for n={self.n}")
+        self.substrate.request(rank, "fault", {"mode": "die_next_round"})
 
     # --- MPMD extras (launcher surface) --------------------------------
     def memory_report(self, state) -> str:

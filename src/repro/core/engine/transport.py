@@ -36,12 +36,28 @@ import numpy as np
 DEFAULT_TRANSPORT = "shm"
 TRANSPORTS = ("shm", "pipe")
 
+#: collective topology of the multiproc substrate: ``hub`` routes every
+#: AllGatherv/ReduceScatterv payload through the coordinator (PR 3);
+#: ``ring`` moves them over peer-to-peer worker↔worker channels
+#: (:mod:`repro.core.engine.ring`) and shrinks the coordinator to a
+#: control plane.  Selection order: explicit arg > env > default.
+DEFAULT_TOPOLOGY = "hub"
+TOPOLOGIES = ("hub", "ring")
+
 
 def resolve_transport(name: Optional[str] = None) -> str:
     name = name or os.environ.get("CEPHALO_MP_TRANSPORT", DEFAULT_TRANSPORT)
     if name not in TRANSPORTS:
         raise ValueError(
             f"unknown transport {name!r}; choose from {TRANSPORTS}")
+    return name
+
+
+def resolve_topology(name: Optional[str] = None) -> str:
+    name = name or os.environ.get("CEPHALO_MP_TOPOLOGY", DEFAULT_TOPOLOGY)
+    if name not in TOPOLOGIES:
+        raise ValueError(
+            f"unknown topology {name!r}; choose from {TOPOLOGIES}")
     return name
 
 
@@ -155,12 +171,21 @@ class Channel:
         # arena and attaches read-only to the peer's by announced name.
         self._send_arena = ShmArena(owner=True) if use_shm else None
         self._recv_arena = ShmArena(owner=False) if use_shm else None
+        #: data-plane accounting: array payload bytes by message tag,
+        #: each direction (headers/metas excluded — those are the
+        #: control plane).  The throughput benchmark reads these to
+        #: show hub-vs-ring bytes through the coordinator.
+        self.array_bytes_out: Dict[str, int] = {}
+        self.array_bytes_in: Dict[str, int] = {}
 
     # --- send ---------------------------------------------------------------
     def send(self, tag: str, meta: Optional[dict] = None,
              arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
         arrays = arrays or {}
         arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        nbytes = sum(int(a.nbytes) for a in arrays.values())
+        self.array_bytes_out[tag] = \
+            self.array_bytes_out.get(tag, 0) + nbytes
         placed = self._send_arena.write(arrays) \
             if (self._send_arena is not None and arrays) else None
         if placed is not None:
@@ -201,6 +226,8 @@ class Channel:
             for k, shape, dtype in manifest:
                 buf = self.conn.recv_bytes()
                 arrays[k] = np.frombuffer(buf, dtype=dtype).reshape(shape)
+        self.array_bytes_in[tag] = self.array_bytes_in.get(tag, 0) + \
+            sum(int(a.nbytes) for a in arrays.values())
         return tag, meta, arrays
 
     def close(self) -> None:

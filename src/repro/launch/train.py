@@ -10,10 +10,14 @@ Two substrates (``repro.core.engine.build_train_step``):
   trains with truly uneven per-rank batches and state shards.
   ``--substrate loopback`` (default) simulates the fleet in-process;
   ``--substrate multiproc --nprocs N`` runs one OS process per rank
-  (``repro.core.engine.multiproc``) with host-side AllGatherv /
+  (``repro.core.engine.multiproc``) with real AllGatherv /
   ReduceScatterv and *wall-clock* telemetry — ``--elastic`` then refits
   from real measurements, and ``--straggler`` makes the chosen worker
   process actually slower instead of scaling an oracle.
+  ``--topology hub`` (default) routes collective payloads through the
+  coordinator; ``--topology ring`` moves them over peer-to-peer
+  worker↔worker ring channels and keeps the coordinator control-plane
+  only (also selectable via ``CEPHALO_MP_TOPOLOGY``).
 
 ``--ga-mode`` selects any registered gradient-accumulation schedule
 (layered / per_microbatch / interleaved / ...) on either substrate.
@@ -51,6 +55,7 @@ from repro.core import device_specs as D
 from repro.core.cost_model import analytic_cluster_model
 from repro.core.engine import (build_train_step, homogeneous_plan,
                                list_schedules)
+from repro.core.engine.transport import TOPOLOGIES, resolve_topology
 from repro.core.model_stats import build_model_stats
 from repro.core.planner import auto_solve
 from repro.data.pipeline import DataConfig, SyntheticStream
@@ -140,10 +145,15 @@ def run_mpmd(args) -> None:
                     oracle.degrade(_r, _f)
     elif args.straggler:
         raise SystemExit("--straggler needs --elastic")
+    substrate_kw = {}
+    if args.substrate == "multiproc":
+        # explicit flag > $CEPHALO_MP_TOPOLOGY > hub
+        substrate_kw["topology"] = resolve_topology(args.topology)
     engine = build_train_step(cfg, plan, schedule=args.ga_mode,
                               substrate=args.substrate,
                               adam=AdamConfig(lr=args.lr),
-                              seq_len=args.seq, **elastic_kw)
+                              seq_len=args.seq, **substrate_kw,
+                              **elastic_kw)
     try:
         state = engine.init_state(jax.random.PRNGKey(args.seed))
         print(engine.memory_report(state))
@@ -217,6 +227,12 @@ def main() -> None:
     ap.add_argument("--nprocs", type=int, default=0,
                     help="size the rank fleet explicitly (cycles the "
                          "--cluster device specs); 0 = cluster size")
+    ap.add_argument("--topology", default=None,
+                    choices=list(TOPOLOGIES),
+                    help="multiproc collective topology: hub routes "
+                         "payloads through the coordinator, ring moves "
+                         "them peer-to-peer (default: "
+                         "$CEPHALO_MP_TOPOLOGY or hub)")
     ap.add_argument("--elastic", action="store_true",
                     help="enable the replanning runtime (mpmd only)")
     ap.add_argument("--straggler", default="",
@@ -231,6 +247,11 @@ def main() -> None:
     if args.runtime != "mpmd" and (args.substrate != "loopback"
                                    or args.nprocs):
         raise SystemExit("--substrate/--nprocs apply to --runtime mpmd")
+    if args.topology is not None and args.substrate != "multiproc":
+        # only an *explicit* flag errors; the CEPHALO_MP_TOPOLOGY env
+        # default is a multiproc knob and stays inert elsewhere
+        raise SystemExit("--topology applies to --substrate multiproc "
+                         "(loopback has no wire at all)")
     if args.runtime == "mpmd":
         run_mpmd(args)
     else:

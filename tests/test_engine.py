@@ -8,10 +8,10 @@ Three layers of guarantees:
 * **schedule parity on the loopback substrate** (single device): all
   registered schedules produce numerically identical gradients/updates
   for the same (cfg, plan) via ``build_train_step`` — the Eq. 1
-  invariance that makes a schedule a pure performance choice;
-* **cross-substrate parity** (subprocess, plan.n fake devices): the SPMD
-  shard_map engine and the MPMD loopback engine produce matching losses
-  and updated params for the same (cfg, plan, schedule, data block).
+  invariance that makes a schedule a pure performance choice.
+
+Cross-substrate parity (shard_map / loopback / multiproc-hub /
+multiproc-ring) lives in ``tests/test_parity_matrix.py``.
 """
 
 import jax
@@ -150,51 +150,7 @@ def test_loopback_schedule_parity_and_collective_structure():
 
 
 # --- cross-substrate parity --------------------------------------------------
-
-@pytest.mark.integration
-def test_spmd_mpmd_engine_parity(subproc):
-    """The acceptance gate: both substrates, both paper GA schedules (plus
-    interleaved), same (cfg, plan, block) → matching losses and updated
-    params through the one build_train_step entry point."""
-    out = subproc("""
-import jax, numpy as np
-import jax.numpy as jnp
-from repro.configs.base import get_arch
-from repro.core.engine import build_train_step
-from repro.core.partition import Plan, RankPlan
-from repro.data.pipeline import DataConfig, SyntheticStream
-from repro.optim.adam import AdamConfig
-
-cfg = get_arch("tiny-llama").reduced()
-seq = 16
-ranks = [
-    RankPlan(0, "A", m=2, ell=2, state_ratio=0.5),
-    RankPlan(1, "B", m=3, ell=1, state_ratio=0.25),
-    RankPlan(2, "C", m=1, ell=2, state_ratio=0.125),
-    RankPlan(3, "D", m=1, ell=1, state_ratio=0.125),
-]
-plan = Plan(model="toy", cluster="toy", global_batch=10, ranks=ranks)
-big = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=5)).sample(0, 10)
-
-for sched in ("layered", "per_microbatch", "interleaved"):
-    engines = {
-        sub: build_train_step(cfg, plan, schedule=sched, substrate=sub,
-                              adam=AdamConfig(lr=1e-3), seq_len=seq)
-        for sub in ("shard_map", "loopback")}
-    outs = {}
-    for sub, eng in engines.items():
-        state = eng.init_state(jax.random.PRNGKey(0))
-        state, loss = eng.step(state, big)
-        outs[sub] = (loss, eng.gather_params(state))
-    l_s, p_s = outs["shard_map"]
-    l_m, p_m = outs["loopback"]
-    assert abs(l_s - l_m) < 1e-4, (sched, l_s, l_m)
-    err = max(jax.tree.leaves(jax.tree.map(
-        lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) -
-                                   jnp.asarray(b, jnp.float32)).max()),
-        p_s, p_m)))
-    assert err < 2e-4, (sched, err)
-    print(f"{sched}: OK loss_diff={abs(l_s - l_m):.2e} err={err:.2e}")
-print("ALL-OK")
-""", n_devices=4, timeout=1800)
-    assert "ALL-OK" in out
+# The SPMD↔MPMD pairwise parity check moved into the one parametrized
+# harness in tests/test_parity_matrix.py (all substrates × all
+# schedules, host substrates bitwise, shard_map at the documented
+# tolerance) — one matrix instead of scattered pairwise checks.

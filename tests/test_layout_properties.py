@@ -1,0 +1,189 @@
+"""Property tests: shared layout primitives + ring chunk scheduling.
+
+Two invariant families under arbitrary ragged shard geometries
+(including zero-size shards and a single rank — ISSUE 4 satellite):
+
+* the flat layout path every substrate shares
+  (``LoopbackSubstrate.flatten_tree / slice_flats / concat_slices /
+  unflatten_flats``) round-trips model pytrees losslessly for any
+  ratio vector the planner can emit;
+* the pure ring collective schedule (:mod:`repro.core.engine.ring`),
+  driven in lockstep by :func:`ring.simulate` — the *same* generators
+  the multiproc workers drive over real channels — reconstructs
+  AllGatherv exactly and reduces ReduceScatterv contributions in fixed
+  rank order, for any rank count, any ragged chunk sizes, any active
+  subset.
+
+Runs under real hypothesis when installed, else the deterministic
+fallback shim in ``tests/conftest.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import ring
+from repro.core.engine.substrate import LoopbackSubstrate
+from repro.core.engine.units import UnitPlanner, normalized_ratios
+
+
+# --- layout primitives -------------------------------------------------------
+
+_PLANNERS = {}
+
+
+def _planner(ratios):
+    """UnitPlanner per ratio tuple, cached — layout building is pure."""
+    from repro.configs.base import get_arch
+    key = tuple(round(r, 6) for r in ratios)
+    if key not in _PLANNERS:
+        cfg = get_arch("tiny-llama").reduced()
+        _PLANNERS[key] = UnitPlanner(cfg, list(key))
+    return _PLANNERS[key]
+
+
+def _filled_params(planner, seed):
+    """Model-shaped pytree with deterministic distinct values."""
+    import jax
+
+    from repro.models import model as M
+    shapes = jax.eval_shape(
+        lambda: M.init_params(planner.cfg, jax.random.PRNGKey(0)))
+    leaves, treedef = jax.tree.flatten(shapes)
+    rng = np.random.default_rng(seed)
+    filled = [rng.standard_normal(l.shape).astype(np.float32)
+              for l in leaves]
+    return jax.tree.unflatten(treedef, filled)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 4), zero_rank=st.booleans(),
+       r0=st.floats(0.05, 1.0), r1=st.floats(0.05, 1.0),
+       r2=st.floats(0.05, 1.0), r3=st.floats(0.05, 1.0),
+       seed=st.integers(0, 2**20))
+def test_layout_roundtrip_arbitrary_ragged_shards(n, zero_rank, r0, r1,
+                                                  r2, r3, seed):
+    """flatten → slice → concat → unflatten is lossless for any ratio
+    vector: uneven, with a zero-ratio rank (zero-size shards), and the
+    single-rank degenerate case."""
+    import jax
+    ratios = [r0, r1, r2, r3][:n]
+    if zero_rank and n > 1:
+        ratios[0] = 0.0          # zero-size shards for rank 0
+    ratios = [float(x) for x in normalized_ratios(ratios)]
+    planner = _planner(ratios)
+    sub = LoopbackSubstrate(planner)
+    params = _filled_params(planner, seed)
+
+    flats = sub.flatten_tree(params)
+    slices = sub.slice_flats(flats)
+    assert len(slices) == n
+    if zero_rank and n > 1:
+        assert all(s.shape[-1] == 0 for s in slices[0].values())
+    back_flats = sub.concat_slices(slices, key=None)
+    for u in flats:
+        np.testing.assert_array_equal(back_flats[u], flats[u])
+    back = sub.unflatten_flats(back_flats)
+    assert jax.tree.structure(params) == jax.tree.structure(back)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 4), r0=st.floats(0.05, 1.0),
+       r1=st.floats(0.05, 1.0), r2=st.floats(0.05, 1.0),
+       r3=st.floats(0.05, 1.0), seed=st.integers(0, 2**20))
+def test_shard_state_matches_slice_of_flats(n, r0, r1, r2, r3, seed):
+    """shard_state (init / migration import) and slice_flats (gradient
+    scatter) are the same layout path — shards must equal slices."""
+    ratios = [float(x) for x in normalized_ratios([r0, r1, r2, r3][:n])]
+    planner = _planner(ratios)
+    sub = LoopbackSubstrate(planner)
+    params = _filled_params(planner, seed)
+    shards = sub.shard_state(params)
+    slices = sub.slice_flats(sub.flatten_tree(params))
+    for r in range(n):
+        for g in planner.groups:
+            np.testing.assert_array_equal(shards[r][g.name]["p"],
+                                          slices[r][g.name])
+            assert shards[r][g.name]["m"].shape == \
+                slices[r][g.name].shape
+
+
+# --- ring chunk scheduling ---------------------------------------------------
+
+def _ragged_chunks(rng, n, units=("u", "w")):
+    """Per-rank ragged chunk dicts, sizes drawn in [0, 9]."""
+    return [{u: rng.standard_normal(int(rng.integers(0, 10))
+                                    ).astype(np.float32)
+             for u in units} for _ in range(n)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), seed=st.integers(0, 2**20))
+def test_ring_allgatherv_reconstructs_all_chunks(n, seed):
+    """Every rank ends with every origin's exact chunk; concatenation
+    in list order equals the hub's rank-order concat."""
+    rng = np.random.default_rng(seed)
+    chunks = _ragged_chunks(rng, n)
+    results = ring.simulate(
+        [ring.allgatherv(r, n, chunks[r]) for r in range(n)])
+    for r in range(n):
+        assert len(results[r]) == n
+        for o in range(n):
+            for u in chunks[o]:
+                np.testing.assert_array_equal(results[r][o][u],
+                                              chunks[o][u])
+        full = np.concatenate([results[r][o]["u"] for o in range(n)])
+        expect = np.concatenate([chunks[o]["u"] for o in range(n)])
+        np.testing.assert_array_equal(full, expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), active_mask=st.integers(0, 63),
+       seed=st.integers(0, 2**20))
+def test_ring_reduce_scatterv_fixed_order_sum(n, active_mask, seed):
+    """Each destination's combined result equals the fixed-rank-order
+    fp32 sum over the active origins' contributions — bitwise, for any
+    active subset (including none and all) and ragged per-dest sizes."""
+    rng = np.random.default_rng(seed)
+    active = [r for r in range(n) if active_mask & (1 << r)]
+    dest_sizes = [int(rng.integers(0, 8)) for _ in range(n)]
+    contribs = {o: [{"g": rng.standard_normal(dest_sizes[d]
+                                              ).astype(np.float32)}
+                    for d in range(n)] for o in active}
+    results = ring.simulate(
+        [ring.reduce_scatterv(r, n, contribs.get(r)) for r in range(n)])
+    for r in range(n):
+        combined = ring.combine_fixed_order(results[r])
+        if not active:
+            assert combined is None
+            continue
+        expect = None
+        for o in range(n):          # fixed rank order, like the hub
+            if o not in contribs:
+                continue
+            c = np.asarray(contribs[o][r]["g"], np.float32)
+            expect = c.copy() if expect is None else expect + c
+        np.testing.assert_array_equal(combined["g"], expect)
+
+
+def test_ring_neighbors_and_origins():
+    assert ring.ring_neighbors(4, 0) == (3, 1)
+    assert ring.ring_neighbors(4, 3) == (2, 0)
+    assert ring.ring_neighbors(1, 0) == (0, 0)
+    with pytest.raises(ValueError):
+        ring.ring_neighbors(2, 2)
+    # at step s every rank forwards what it received at step s-1
+    for n in (2, 3, 5):
+        for r in range(n):
+            for s in range(1, n - 1):
+                assert ring.origin_sent(n, r, s) == \
+                    ring.origin_received(n, r, s - 1)
+
+
+def test_reduce_scatterv_validates_dest_count():
+    gen = ring.reduce_scatterv(0, 3, [{}])
+    with pytest.raises(ValueError, match="entries"):
+        next(gen)

@@ -1,0 +1,156 @@
+"""Cross-substrate × schedule parity matrix (ISSUE 4 satellite).
+
+One parametrized harness replaces the ad-hoc pairwise parity checks
+that used to live in ``test_engine.py`` / ``test_multiproc.py``: the
+same seeded step runs across every substrate × every registered GA
+schedule, and the results are compared against the loopback reference.
+
+* {loopback, multiproc-hub, multiproc-ring} are **bitwise-identical**:
+  same rank-order float accumulation by construction (the hub sums at
+  the coordinator, the ring accumulate-then-combines at each
+  destination — same order, same values), so losses, params, and Adam
+  moments after N steps match exactly, and the collective event counts
+  agree with the schedule's round structure.
+* shard_map joins in the integration variant (fake host devices, run
+  in a subprocess) with the documented 2e-4 post-Adam tolerance — its
+  in-graph reductions re-associate floats, which is exactly why it
+  cannot be in the bitwise club.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.core.engine import build_train_step
+from repro.core.partition import Plan, RankPlan
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+SCHEDULES = ("layered", "per_microbatch", "interleaved")
+
+#: ragged on purpose: uneven m/ell so schedules produce different round
+#: structures and uneven ratios so every collective is variable-size.
+RANKS = [("A", 2, 2, 0.6), ("B", 1, 1, 0.4)]
+
+
+def _plan():
+    ranks = [RankPlan(i, d, m=m, ell=ell, state_ratio=r)
+             for i, (d, m, ell, r) in enumerate(RANKS)]
+    return Plan(model="toy", cluster="toy",
+                global_batch=sum(m * ell for _, m, ell, _ in RANKS),
+                ranks=ranks)
+
+
+def _run_cell(cfg, plan, schedule, substrate, steps=2, seq=16, **kw):
+    """One matrix cell: N seeded steps; returns losses, exported state,
+    and collective event counts."""
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=2))
+    eng = build_train_step(cfg, plan, substrate=substrate,
+                           schedule=schedule,
+                           adam=AdamConfig(lr=1e-3), seq_len=seq, **kw)
+    try:
+        state = eng.init_state(jax.random.PRNGKey(0))
+        losses = []
+        for step in range(steps):
+            state, loss = eng.step(state, stream.sample(step,
+                                                        plan.global_batch))
+            losses.append(float(loss))
+        exported = eng.export_state(state)
+        if substrate == "multiproc":
+            stats = dict(eng.substrate.stats)
+        elif substrate == "loopback":
+            stats = dict(eng.trainer.substrate.stats)
+        else:
+            stats = None         # shard_map counts live in traced HLO
+    finally:
+        eng.close()
+    return losses, exported, stats
+
+
+def _tree_max_err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(jnp.asarray(x, jnp.float32) -
+                                   jnp.asarray(y, jnp.float32)).max()),
+        a, b)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_parity_matrix_host_substrates(schedule):
+    """loopback vs multiproc-hub vs multiproc-ring: bitwise, per
+    schedule — losses, params, Adam moments, and collective counts."""
+    cfg = get_arch("tiny-llama").reduced()
+    plan = _plan()
+    ref_losses, ref_export, ref_stats = _run_cell(
+        cfg, plan, schedule, "loopback")
+    # the reference must be non-trivial or the bitwise claim is vacuous
+    assert ref_export["step"] == 2
+    assert max(float(jnp.abs(x).max())
+               for x in jax.tree.leaves(ref_export["m"])) > 0
+    for topology in ("hub", "ring"):
+        losses, exported, stats = _run_cell(
+            cfg, plan, schedule, "multiproc", topology=topology)
+        assert losses == ref_losses, (topology, losses, ref_losses)
+        assert stats == ref_stats, (topology, stats, ref_stats)
+        for part in ("p", "m", "v"):
+            err = _tree_max_err(ref_export[part], exported[part])
+            assert err == 0.0, (topology, part, err)
+
+
+@pytest.mark.integration
+def test_parity_matrix_with_shard_map(subproc):
+    """The full matrix including the SPMD substrate: host substrates
+    bitwise among themselves, shard_map within the documented 2e-4
+    post-Adam tolerance, every schedule."""
+    out = subproc("""
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.configs.base import get_arch
+from repro.core.engine import build_train_step
+from repro.core.partition import Plan, RankPlan
+from repro.data.pipeline import DataConfig, SyntheticStream
+from repro.optim.adam import AdamConfig
+
+cfg = get_arch("tiny-llama").reduced()
+seq = 16
+ranks = [RankPlan(0, "A", m=2, ell=2, state_ratio=0.6),
+         RankPlan(1, "B", m=1, ell=1, state_ratio=0.4)]
+plan = Plan(model="toy", cluster="toy", global_batch=5, ranks=ranks)
+stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=5))
+big = stream.sample(0, plan.global_batch)
+
+def err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(jnp.asarray(x, jnp.float32) -
+                                   jnp.asarray(y, jnp.float32)).max()),
+        a, b)))
+
+cells = [("loopback", {}), ("multiproc", {"topology": "hub"}),
+         ("multiproc", {"topology": "ring"}), ("shard_map", {})]
+for sched in ("layered", "per_microbatch", "interleaved"):
+    outs = {}
+    for sub, kw in cells:
+        eng = build_train_step(cfg, plan, schedule=sched, substrate=sub,
+                               adam=AdamConfig(lr=1e-3), seq_len=seq, **kw)
+        try:
+            state = eng.init_state(jax.random.PRNGKey(0))
+            state, loss = eng.step(state, big)
+            outs[(sub,) + tuple(kw.values())] = \\
+                (float(loss), eng.gather_params(state))
+        finally:
+            eng.close()
+    l_ref, p_ref = outs[("loopback",)]
+    for key in (("multiproc", "hub"), ("multiproc", "ring")):
+        l, p = outs[key]
+        assert l == l_ref, (sched, key, l, l_ref)
+        assert err(p_ref, p) == 0.0, (sched, key)
+    l_s, p_s = outs[("shard_map",)]
+    assert abs(l_s - l_ref) < 1e-4, (sched, l_s, l_ref)
+    e = err(p_ref, p_s)
+    assert e < 2e-4, (sched, e)
+    print(f"{sched}: host bitwise, shard_map err={e:.2e}")
+print("ALL-OK")
+""", n_devices=2, timeout=1800)
+    assert "ALL-OK" in out
