@@ -1,5 +1,6 @@
 """Multiproc topologies vs loopback MPMD — same plan, same schedule,
-real process boundaries, hub-vs-ring data-plane accounting.
+real process boundaries, hub-vs-ring data-plane accounting, and the
+overlapped-round pipeline's hidden-communication fraction.
 
 The loopback substrate executes the per-rank programs *serially* inside
 one process.  The multiproc substrate runs them concurrently in one OS
@@ -13,27 +14,45 @@ topologies:
   per-round data-plane bytes drop to ~0 (the acceptance gate of
   ISSUE 4 — visible at any N, stark at ``--nprocs 4``).
 
-For each requested topology this benchmark runs the identical
+``--overlap on|both`` (ring only, ISSUE 5) additionally runs the
+overlapped round pipeline — each worker prefetches round *k+1*'s
+parameter AllGatherv on a dedicated comm thread while round *k*
+computes — and reports the per-rank **hidden-communication fraction**
+(wire seconds the compute thread never waited for) plus the step-time
+delta vs the synchronous ring.  Overlap needs more than one collective
+round per step to have anything to prefetch, so when ``--schedule`` is
+left unset an overlap run defaults to ``per_microbatch`` (the sync-only
+default stays ``layered``).
+
+For each requested variant this benchmark runs the identical
 (plan, schedule) step and reports measured steps/s, the per-round
 collective bytes that crossed coordinator channels, the per-rank
 worker-measured step wall-clock, and a parity column: max |Δ| over
 exported params + Adam moments vs the loopback run (0.0 expected —
-all three substrates are bitwise-identical by construction).
+all substrates, overlapped or not, are bitwise-identical by
+construction).  ``--json PATH`` additionally writes the machine-readable
+``BENCH_multiproc.json`` artifact (step time + hidden-comm fraction per
+variant) that ``benchmarks/run.py`` and CI archive for the repo's perf
+trajectory.
 
     PYTHONPATH=src python -m benchmarks.multiproc_throughput \
-        [--topology hub|ring|both] [--nprocs N] [--steps K] \
-        [--schedule layered|per_microbatch|interleaved]
+        [--topology hub|ring|both] [--overlap off|on|both] [--nprocs N] \
+        [--steps K] [--schedule layered|per_microbatch|interleaved] \
+        [--json BENCH_multiproc.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 #: (m, ell, ratio-weight) specs cycled out to --nprocs ranks: ragged on
 #: purpose so the AllGatherv/ReduceScatterv are genuinely variable-size.
 RANK_SPECS = [(3, 2, 0.6), (2, 1, 0.4), (1, 2, 0.3), (2, 2, 0.2)]
+
+OVERLAP_MODES = ("off", "on", "both")
 
 
 def _plan(nprocs: int):
@@ -48,9 +67,35 @@ def _plan(nprocs: int):
                 ranks=ranks)
 
 
+def effective_schedule(schedule: Optional[str], overlap: str) -> str:
+    """Resolve the benchmark's GA schedule: explicit wins; otherwise
+    overlap runs default to ``per_microbatch`` (overlap has nothing to
+    prefetch with ``layered``'s single collective round)."""
+    if schedule is not None:
+        return schedule
+    return "per_microbatch" if overlap != "off" else "layered"
+
+
+def _variants(topologies: tuple, overlap: str) -> List[tuple]:
+    """(label, build kwargs) per multiproc run.  Overlap applies to the
+    ring topology only — the hub data plane has no prefetch lane."""
+    out = []
+    for topo in topologies:
+        if topo == "ring" and overlap == "on":
+            out.append((f"{topo}+overlap",
+                        {"topology": topo, "overlap_rounds": True}))
+            continue
+        out.append((topo, {"topology": topo, "overlap_rounds": False}))
+        if topo == "ring" and overlap == "both":
+            out.append((f"{topo}+overlap",
+                        {"topology": topo, "overlap_rounds": True}))
+    return out
+
+
 def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
-         schedule: str = "layered",
-         topologies: tuple = ("hub", "ring")) -> List[Dict]:
+         schedule: Optional[str] = None,
+         topologies: tuple = ("hub", "ring"),
+         overlap: str = "off") -> List[Dict]:
     import jax
     import jax.numpy as jnp
 
@@ -60,6 +105,9 @@ def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
     from repro.data.pipeline import DataConfig, SyntheticStream
     from repro.optim.adam import AdamConfig
 
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(f"overlap must be one of {OVERLAP_MODES}")
+    schedule = effective_schedule(schedule, overlap)
     cfg = get_arch("tiny-llama").reduced()
     plan = _plan(nprocs)
     batch = plan.global_batch
@@ -73,13 +121,21 @@ def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
         state, _ = eng.step(state, stream.sample(0, batch))   # compile
         bytes0 = eng.substrate.coordinator_bytes(COLLECTIVE_TAGS) \
             if substrate == "multiproc" else 0
+        # aggregate ring comm telemetry over every timed step (a single
+        # step's split is noisy on a contended host)
+        comm_agg: Dict[int, Dict[str, float]] = {}
         t0 = time.perf_counter()
         for step in range(1, steps + 1):
             state, loss = eng.step(state, stream.sample(step, batch))
+            if substrate == "multiproc":
+                for rank, c in eng.last_step_comm.items():
+                    agg = comm_agg.setdefault(rank, {})
+                    for k, v in c.items():
+                        agg[k] = agg.get(k, 0.0) + float(v)
         dt = time.perf_counter() - t0
         coll_bytes = (eng.substrate.coordinator_bytes(COLLECTIVE_TAGS)
                       - bytes0) if substrate == "multiproc" else 0
-        return eng, state, steps / dt, loss, coll_bytes
+        return eng, state, steps / dt, loss, coll_bytes, comm_agg
 
     def export_err(ref, exported):
         err = 0.0
@@ -90,18 +146,25 @@ def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
                 ref[part], exported[part]))))
         return err
 
-    lb_eng, lb_state, lb_sps, lb_loss, _ = run("loopback")
+    lb_eng, lb_state, lb_sps, lb_loss, _, _ = run("loopback")
     ref = lb_eng.export_state(lb_state)
     n_rounds = steps * len(lb_eng.schedule.chunks(max(plan.ell_pad, 1)))
     out = [{"substrate": "loopback", "steps_per_s": round(lb_sps, 3),
             "loss": round(lb_loss, 4),
-            "note": "serial in-process fleet (reference)"}]
-    for topo in topologies:
-        eng, state, sps, loss, coll_bytes = run("multiproc", topology=topo)
+            "note": f"serial in-process fleet (reference, "
+                    f"schedule={schedule})"}]
+    sync_ring_sps = None
+    for label, kw in _variants(topologies, overlap):
+        eng, state, sps, loss, coll_bytes, comm_agg = run("multiproc", **kw)
         try:
             err = export_err(ref, eng.export_state(state))
-            out.append({
-                "substrate": f"multiproc/{topo}",
+            # the engine's own metric, evaluated on the aggregate (one
+            # step's split is noisy on a contended host)
+            fracs = eng.hidden_comm_fraction(comm_agg)
+            mean_hidden = round(sum(fracs.values()) / len(fracs), 3) \
+                if fracs else 0.0
+            row = {
+                "substrate": f"multiproc/{label}",
                 "steps_per_s": round(sps, 3), "loss": round(loss, 4),
                 "coordinator_kib_per_round":
                     round(coll_bytes / max(n_rounds, 1) / 1024, 1),
@@ -109,9 +172,17 @@ def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
                 "note": f"{plan.n} rank processes, "
                         f"{eng.substrate.stats['all_gather']} AG / "
                         f"{eng.substrate.stats['reduce_scatter']} RS "
-                        "events (0.0 err = bitwise)"})
+                        "events (0.0 err = bitwise)"}
+            if label == "ring":
+                sync_ring_sps = sps
+            if eng.overlap or label == "ring":
+                row["hidden_comm_frac"] = mean_hidden
+            if eng.overlap and sync_ring_sps:
+                delta = (1.0 / sync_ring_sps - 1.0 / sps)
+                row["step_delta_ms_vs_sync"] = round(delta * 1e3, 2)
+            out.append(row)
             for rank, wall in sorted(eng.last_step_walls.items()):
-                out.append({"substrate": f"  {topo} rank{rank}_wall",
+                out.append({"substrate": f"  {label} rank{rank}_wall",
                             "step_ms": round(wall * 1e3, 2),
                             "note": "worker-measured fwd+bwd wall-clock"})
         finally:
@@ -119,40 +190,108 @@ def rows(nprocs: int = 2, seq: int = 16, steps: int = 4,
     return out
 
 
+def artifact(rows_out: List[Dict], nprocs: int, schedule: Optional[str],
+             steps: int) -> Dict:
+    """``BENCH_multiproc.json`` payload: the per-variant perf headline
+    (step time, hidden-comm fraction, parity) in a stable shape the
+    repo's perf trajectory can diff across commits."""
+    variants = {}
+    for r in rows_out:
+        name = str(r["substrate"])
+        if name.startswith("  ") or "steps_per_s" not in r:
+            continue
+        variants[name] = {
+            "step_time_s": round(1.0 / r["steps_per_s"], 4)
+            if r["steps_per_s"] else None,
+            "steps_per_s": r["steps_per_s"],
+            "hidden_comm_fraction": r.get("hidden_comm_frac", 0.0),
+            "coordinator_kib_per_round":
+                r.get("coordinator_kib_per_round"),
+            "max_abs_err_vs_loopback": r.get("max_abs_err_vs_loopback"),
+        }
+    return {"benchmark": "multiproc_throughput",
+            "nprocs": nprocs, "schedule": schedule, "steps": steps,
+            "variants": variants}
+
+
+def write_artifact(path: str, rows_out: List[Dict], nprocs: int,
+                   schedule: Optional[str], steps: int) -> None:
+    """Write the ``BENCH_multiproc.json`` artifact (shared by ``main``
+    and ``benchmarks/run.py`` so the recorded config can't drift from
+    the run that produced the rows)."""
+    with open(path, "w") as fh:
+        json.dump(artifact(rows_out, nprocs, schedule, steps), fh,
+                  indent=2, sort_keys=True)
+    print(f"wrote {path}", flush=True)
+
+
 def main() -> None:
     from repro.core.engine.transport import TOPOLOGIES
     ap = argparse.ArgumentParser()
     ap.add_argument("--topology", default="both",
                     choices=list(TOPOLOGIES) + ["both"])
+    ap.add_argument("--overlap", default="off", choices=list(OVERLAP_MODES),
+                    help="ring only: run the overlapped round pipeline "
+                         "('on'), or sync + overlapped side by side "
+                         "('both') with the hidden-comm fraction and "
+                         "step-time delta")
     ap.add_argument("--nprocs", type=int, default=2)
     ap.add_argument("--steps", type=int, default=4)
     ap.add_argument("--seq", type=int, default=16)
-    ap.add_argument("--schedule", default="layered")
+    ap.add_argument("--schedule", default=None,
+                    help="GA schedule (default: layered, or "
+                         "per_microbatch when --overlap is on/both)")
+    ap.add_argument("--json", default="",
+                    help="also write the BENCH_multiproc.json artifact "
+                         "to this path")
+    ap.add_argument("--no-hidden-gate", action="store_true",
+                    help="report the hidden-comm fraction but do not "
+                         "fail when it is zero (for oversubscribed CI "
+                         "hosts where the comm thread and compute "
+                         "contend for the same core)")
     args = ap.parse_args()
     topologies = tuple(TOPOLOGIES) if args.topology == "both" \
         else (args.topology,)
+    if args.overlap != "off" and "ring" not in topologies:
+        raise SystemExit("--overlap needs --topology ring (or both)")
+    sched = effective_schedule(args.schedule, args.overlap)
     out = rows(nprocs=args.nprocs, seq=args.seq, steps=args.steps,
-               schedule=args.schedule, topologies=topologies)
+               schedule=sched, topologies=topologies,
+               overlap=args.overlap)
     w = max(len(str(r["substrate"])) for r in out)
     for r in out:
         extras = {k: v for k, v in r.items()
                   if k not in ("substrate", "note")}
         kv = "  ".join(f"{k}={v}" for k, v in extras.items())
         print(f"{r['substrate']:<{w}}  {kv:<60}  {r['note']}")
+    if args.json:
+        write_artifact(args.json, out, args.nprocs, sched, args.steps)
     worst = max((r["max_abs_err_vs_loopback"] for r in out
                  if "max_abs_err_vs_loopback" in r), default=0.0)
     if worst > 0.0:
         raise SystemExit(f"FAIL: cross-substrate parity error {worst}")
     if "ring" in topologies:
-        ring_kib = next(r["coordinator_kib_per_round"] for r in out
-                        if r["substrate"] == "multiproc/ring")
-        if ring_kib > 1.0:
+        for r in out:
+            if not str(r["substrate"]).startswith("multiproc/ring"):
+                continue
+            ring_kib = r["coordinator_kib_per_round"]
+            if ring_kib > 1.0:
+                raise SystemExit(
+                    f"FAIL: {r['substrate']} coordinator moved "
+                    f"{ring_kib} KiB/round of collective payload "
+                    "(expected ~0: control plane only)")
+    if args.overlap != "off":
+        hidden = max((r.get("hidden_comm_frac", 0.0) for r in out
+                      if "overlap" in str(r["substrate"])), default=0.0)
+        if hidden <= 0.0 and not args.no_hidden_gate:
             raise SystemExit(
-                f"FAIL: ring coordinator moved {ring_kib} KiB/round of "
-                "collective payload (expected ~0: control plane only)")
+                "FAIL: overlapped ring hid no communication time "
+                "(hidden_comm_frac = 0)")
     print("PASS: multiproc matches loopback bitwise"
           + (" and the ring coordinator is control-plane only"
-             if "ring" in topologies else ""))
+             if "ring" in topologies else "")
+          + (" and overlap hid a nonzero comm fraction"
+             if args.overlap != "off" else ""))
 
 
 if __name__ == "__main__":

@@ -1,9 +1,15 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the headline
-number for that artifact) followed by the full tables.
+number for that artifact) followed by the full tables.  The multiproc
+section (skipped under ``--fast``) runs the ring topology sync *and*
+overlapped and writes the machine-readable ``BENCH_multiproc.json``
+artifact (step time + hidden-comm fraction per variant) next to the
+working directory — the repo's multiproc perf trajectory, archived by
+the slow CI job.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] \
+        [--multiproc-json BENCH_multiproc.json]
 """
 
 from __future__ import annotations
@@ -33,6 +39,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the subprocess/HLO and Cluster-B sections")
+    ap.add_argument("--multiproc-json", default="BENCH_multiproc.json",
+                    help="path for the multiproc perf artifact "
+                         "(written unless --fast; '' disables)")
     args = ap.parse_args()
 
     from benchmarks import (elastic_recovery, grad_accum, model_accuracy,
@@ -59,10 +68,26 @@ def main() -> None:
     ]
     if not args.fast:
         from benchmarks import multiproc_throughput
+
+        def _multiproc_rows():
+            # ring sync + overlapped side by side; the artifact is the
+            # perf-trajectory headline (step time, hidden-comm fraction).
+            # One kwargs dict feeds both the run and the artifact
+            # metadata, so the recorded config can't drift from the run.
+            kw = dict(nprocs=2, steps=4, overlap="both",
+                      schedule=multiproc_throughput.effective_schedule(
+                          None, "both"))
+            rows = multiproc_throughput.rows(**kw)
+            if args.multiproc_json:
+                multiproc_throughput.write_artifact(
+                    args.multiproc_json, rows, nprocs=kw["nprocs"],
+                    schedule=kw["schedule"], steps=kw["steps"])
+            return rows
+
         sections += [
             ("table5_cluster_b", T.table5_cluster_b,
              lambda rows: f"rows={len(rows)}"),
-            ("multiproc_throughput", multiproc_throughput.rows,
+            ("multiproc_throughput", _multiproc_rows,
              lambda rows: "parity_err=" + str(max(
                  r["max_abs_err_vs_loopback"] for r in rows
                  if "max_abs_err_vs_loopback" in r))),
@@ -78,14 +103,14 @@ def main() -> None:
     csv_lines = ["name,us_per_call,derived"]
     details = []
     for name, fn, derive in sections:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             rows = fn()
             derived = derive(rows)
         except Exception as e:  # noqa: BLE001
             rows = [{"error": f"{type(e).__name__}: {e}"}]
             derived = "ERROR"
-        us = (time.time() - t0) * 1e6
+        us = (time.perf_counter() - t0) * 1e6
         csv_lines.append(f"{name},{us:.0f},{derived}")
         if name == "fig9_configs":
             details.append(f"\n== {name} ==\n" + "\n\n".join(rows))

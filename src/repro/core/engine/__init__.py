@@ -26,10 +26,11 @@ for them (DESIGN.md §Engine):
   ProcessEngine**: the loopback surface across real OS process
   boundaries (one spawned worker per rank, AllGatherv/ReduceScatterv
   over :mod:`repro.core.engine.transport`, hub or peer-to-peer ring
-  topology — the ragged ring algorithms live in
-  :mod:`repro.core.engine.ring`), plus **WallClockOracle**, the
-  real-measurement telemetry source for the elastic loop
-  (docs/multiproc.md).
+  topology — the ragged ring algorithms and the overlapped-round
+  pipeline order live in :mod:`repro.core.engine.ring`; the ring's
+  rounds optionally overlap with compute via ``overlap_rounds=True``),
+  plus **WallClockOracle**, the real-measurement telemetry source for
+  the elastic loop (docs/multiproc.md).
 * :mod:`repro.core.engine.api` — ``build_train_step(cfg, plan,
   schedule=..., substrate=...)``: one entry point that returns a uniform
   ``TrainEngine`` (init_state / step / gather_params) on either

@@ -23,10 +23,11 @@ identical (Eq. 1), which `tests/test_engine.py` asserts numerically.
   boundaries: one worker process per rank, AllGatherv / ReduceScatterv
   through the coordinator (``topology="hub"``) or peer-to-peer over
   worker↔worker ring channels (``topology="ring"``,
-  :mod:`repro.core.engine.multiproc`), bitwise-matching loopback step
-  for step either way.  Engines on this substrate own worker fleets —
-  call :meth:`TrainEngine.close` (or use the engine as a context
-  manager) when done.
+  :mod:`repro.core.engine.multiproc`; add ``overlap_rounds=True`` to
+  prefetch each round's gathers under the previous round's compute),
+  bitwise-matching loopback step for step every way.  Engines on this
+  substrate own worker fleets — call :meth:`TrainEngine.close` (or use
+  the engine as a context manager) when done.
 """
 
 from __future__ import annotations
@@ -214,10 +215,14 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
     devices exist for the plan).  Extra ``knobs`` (``gather_dtype``,
     ``remat``, ``unroll``, ``state_axes``, ...) are forwarded to the
     SPMD program; the multiproc substrate takes ``transport=``,
-    ``topology=`` (``"hub"``/``"ring"``), ``ring_timeout=``,
+    ``topology=`` (``"hub"``/``"ring"``), ``overlap_rounds=`` (ring
+    only: pipeline the collective rounds so round *k+1*'s AllGatherv
+    prefetches under round *k*'s compute — same bits, less exposed
+    wire time; default ``$CEPHALO_MP_OVERLAP``), ``ring_timeout=``,
     ``reply_timeout=``, ``jax_coordinator=``.  With ``elastic=`` the
     knobs are captured and re-applied on every replan rebuild, so e.g.
-    a ring fleet replans into a ring fleet.
+    a ring fleet replans into a ring fleet and an overlapped fleet
+    stays overlapped.
 
     ``elastic`` — an :class:`repro.core.engine.elastic.ElasticConfig`
     (or ``True`` for defaults) returns an

@@ -314,8 +314,10 @@ class ElasticEngine(TrainEngine):
     def _rebuild(self, new_cm: ClusterCostModel, new_plan: Plan,
                  state: Any) -> Any:
         # _mk captures every substrate knob (schedule, transport, the
-        # hub/ring topology, timeouts), so a replan rebuilds the fleet
-        # with the same wiring it had — a ring fleet stays a ring fleet.
+        # hub/ring topology, overlap_rounds, timeouts), so a replan
+        # rebuilds the fleet with the same wiring it had — a ring fleet
+        # stays a ring fleet and an overlapped-pipeline fleet stays
+        # overlapped (docs/elastic.md "knob carry-over").
         new_engine = build_train_step(self.cfg, new_plan, **self._mk)
         state = migrate_state(self.engine, state, new_engine)
         self.engine.close()     # release the old plan's worker fleet

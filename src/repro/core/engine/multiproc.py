@@ -29,6 +29,16 @@ boundaries:
     the results stay bitwise-identical to hub and loopback.  The
     coordinator shrinks to a control plane (round orchestration,
     telemetry, lifecycle) — its per-round data-plane bytes drop to ~0.
+    With ``overlap_rounds=True`` (``CEPHALO_MP_OVERLAP=1``, launcher
+    ``--overlap``) each worker moves its ring data plane to a dedicated
+    communication thread: round *k+1*'s parameter AllGatherv prefetches
+    under round *k*'s compute and round *k*'s gradient ReduceScatterv
+    drains under round *k+1*'s, double-buffered, with a barrier only at
+    step end for Adam — overlap changes *when* payloads move, never the
+    reduction order, so bitwise parity holds
+    (``tests/test_parity_matrix.py`` gates the overlap cells too), and
+    :meth:`ProcessEngine.hidden_comm_fraction` reports how much wire
+    time the pipeline actually hid.
 
   Either way bytes move over :mod:`repro.core.engine.transport`
   (shared-memory arenas or the socket pair).
@@ -58,8 +68,11 @@ from __future__ import annotations
 import dataclasses
 import multiprocessing as mp
 import os
+import queue
+import threading
 import time
 import traceback
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -71,7 +84,8 @@ from repro.core.engine import ring
 from repro.core.engine.api import TrainEngine
 from repro.core.engine.schedules import Schedule
 from repro.core.engine.substrate import LoopbackSubstrate
-from repro.core.engine.transport import (Channel, resolve_topology,
+from repro.core.engine.transport import (Channel, resolve_overlap,
+                                         resolve_topology,
                                          resolve_transport)
 from repro.core.engine.units import UnitPlanner, normalized_ratios
 from repro.core.partition import Plan
@@ -96,7 +110,25 @@ RING_TIMEOUT = REPLY_TIMEOUT
 #: array-carrying reply tags both appear; the throughput benchmark sums
 #: these to show hub-vs-ring bytes through the coordinator.
 COLLECTIVE_TAGS = ("get_state", "state", "round", "grads", "grad_accum",
-                   "ring_round")
+                   "ring_round", "ring_step")
+
+#: per-step ring communication telemetry keys: total seconds the wire
+#: was busy per collective phase, and the *exposed* share — seconds the
+#: compute (main) thread actually stalled on that phase.  Synchronous
+#: rounds expose everything; the overlapped pipeline hides whatever fits
+#: under compute.  hidden = total − exposed.
+COMM_KEYS = ("allgather_s", "reduce_scatter_s",
+             "exposed_allgather_s", "exposed_reduce_scatter_s")
+
+
+def _empty_comm() -> Dict[str, float]:
+    return {k: 0.0 for k in COMM_KEYS}
+
+
+#: overlap-pipeline handoff sentinels (queue items between the worker's
+#: compute thread and its communication thread).
+_ABORT = object()        # main → comm: step aborted, stop consuming
+_COMM_FAILED = object()  # comm → main: comm thread died, see failure[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +174,19 @@ class _RingLinks:
     span the whole ring, and rank 1 (receive-first) breaks it; for the
     all-even corner (n == 1) there are no edges at all.
 
+    Every message is tagged with its collective phase, ring step, round
+    index, and the engine's step counter, and receives verify those
+    tags.  In synchronous mode any mismatch is an immediate
+    out-of-protocol error (nothing may legally arrive early); during an
+    overlapped ``ring_step`` (``out_of_order`` set) receives go through
+    :meth:`Channel.recv_match` instead, so a payload from a later round
+    — the prefetch of round *k+1*'s AllGatherv under round *k*'s
+    compute — parks in the channel buffer instead of being misdelivered,
+    while provably-stale traffic and runaway parking still fail fast.
+    Exactly one thread drives the links at a time (the worker main
+    thread for synchronous rounds, the dedicated communication thread
+    under overlap), so the channels need no locking.
+
     Receives are *bounded* (``spec.ring_timeout``): a peer that goes
     silent mid-collective surfaces as a RuntimeError naming the peer
     rank and the collective phase instead of hanging the fleet.
@@ -153,26 +198,46 @@ class _RingLinks:
         self.prev_rank, self.next_rank = ring.ring_neighbors(n, rank)
         self.prev_ch, self.next_ch = prev_ch, next_ch
         self.timeout = timeout
+        #: fault injection: seconds slept before every forward send,
+        #: making this worker's outbound ring edge deliberately slow
+        #: (the overlap stress tests drive it via the ``fault`` command).
+        self.delay = 0.0
+        #: set by the overlapped pipeline for the duration of a
+        #: ``ring_step``: early traffic from a *later* collective is
+        #: then legitimate and parks via ``recv_match``.  In synchronous
+        #: mode no out-of-order traffic can legally exist, so any
+        #: mismatch raises an out-of-protocol error immediately instead
+        #: of parking until the timeout.
+        self.out_of_order = False
 
-    def run(self, gen, phase: str):
-        """Drive one ring collective generator over the real channels."""
+    def run(self, gen, phase: str, tags: Optional[dict] = None):
+        """Drive one ring collective generator over the real channels.
+
+        ``tags`` (round index, engine step counter) are stamped on every
+        message of this collective and matched on receive.
+        """
+        tags = tags or {}
         return ring.drive(
-            gen, lambda step, payload: self._exchange(phase, step, payload))
+            gen,
+            lambda step, payload: self._exchange(phase, step, payload,
+                                                 tags))
 
     def _exchange(self, phase: str, step: int,
-                  payload: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        meta = {"phase": phase, "step": step, "src": self.rank}
+                  payload: Dict[str, np.ndarray],
+                  tags: dict) -> Dict[str, np.ndarray]:
+        meta = {"phase": phase, "step": step, "src": self.rank, **tags}
+        match = {"phase": phase, "step": step, **tags}
         try:
             if self.rank % 2 == 0:
                 self._send(meta, payload)
-                received = self._recv(phase, step)
+                received = self._recv(phase, step, match)
                 self.prev_ch.send("ring_ack", meta)
-                self._recv_ack(phase, step)
+                self._recv_ack(phase, step, match)
             else:
-                received = self._recv(phase, step)
+                received = self._recv(phase, step, match)
                 self.prev_ch.send("ring_ack", meta)
                 self._send(meta, payload)
-                self._recv_ack(phase, step)
+                self._recv_ack(phase, step, match)
         except (EOFError, OSError) as e:
             raise RuntimeError(
                 f"ring {phase} step {step}: rank {self.rank} lost peer "
@@ -181,34 +246,51 @@ class _RingLinks:
         return received
 
     def _send(self, meta: dict, payload: Dict[str, np.ndarray]) -> None:
+        if self.delay > 0.0:
+            time.sleep(self.delay)
         self.next_ch.send("ring", meta, payload)
 
-    def _recv(self, phase: str, step: int) -> Dict[str, np.ndarray]:
-        tag, meta, arrays = self._bounded_recv(self.prev_ch, phase, step,
-                                               self.prev_rank)
-        if tag != "ring" or meta.get("step") != step:
-            raise RuntimeError(
-                f"ring {phase} step {step}: rank {self.rank} got "
-                f"out-of-protocol message {tag!r} (meta {meta}) from "
-                f"rank {self.prev_rank}")
+    def _recv(self, phase: str, step: int,
+              match: dict) -> Dict[str, np.ndarray]:
+        _, _, arrays = self._bounded_recv(self.prev_ch, "ring", match,
+                                          phase, step, self.prev_rank)
         return arrays
 
-    def _recv_ack(self, phase: str, step: int) -> None:
-        tag, meta, _ = self._bounded_recv(self.next_ch, phase, step,
-                                          self.next_rank)
-        if tag != "ring_ack" or meta.get("step") != step:
-            raise RuntimeError(
-                f"ring {phase} step {step}: rank {self.rank} expected "
-                f"ack from rank {self.next_rank}, got {tag!r}")
+    def _recv_ack(self, phase: str, step: int, match: dict) -> None:
+        self._bounded_recv(self.next_ch, "ring_ack", match, phase, step,
+                           self.next_rank)
 
-    def _bounded_recv(self, ch: Channel, phase: str, step: int, peer: int):
+    def _bounded_recv(self, ch: Channel, tag: str, match: dict,
+                      phase: str, step: int, peer: int):
         try:
-            return ch.recv(timeout=self.timeout)
+            if not self.out_of_order:
+                # synchronous rounds: nothing may legally arrive early,
+                # so verify in place and fail fast on any mismatch
+                got = ch.recv(timeout=self.timeout)
+                g_tag, g_meta, _ = got
+                if g_tag != tag or any(g_meta.get(k) != v
+                                       for k, v in match.items()):
+                    raise RuntimeError(
+                        f"ring {phase} step {step}: rank {self.rank} got "
+                        f"out-of-protocol message {g_tag!r} (meta "
+                        f"{g_meta}) from rank {peer}, expected {tag!r} "
+                        f"{match}")
+                return got
+            # overlapped pipeline: prefetch traffic parks via the
+            # tag-matched receive.  The step-end barrier fully drains
+            # each engine step's ring traffic, so a message tagged with
+            # an older gstep can never be claimed — drop-with-warning
+            # instead of parking it until the timeout.
+            gstep = match.get("gstep")
+            stale = None if gstep is None else \
+                (lambda m: m.get("gstep", gstep) < gstep)
+            return ch.recv_match(tag, match, timeout=self.timeout,
+                                 stale=stale)
         except TimeoutError as e:
             raise RuntimeError(
                 f"ring {phase} step {step}: rank {self.rank} timed out "
-                f"after {self.timeout:.0f}s waiting for rank {peer}"
-                ) from e
+                f"after {self.timeout:.0f}s waiting for {tag!r} from "
+                f"rank {peer} ({e})") from e
 
     def close(self) -> None:
         self.prev_ch.close()
@@ -319,8 +401,61 @@ class _Worker:
                 "t_wall": t_wall * self.slowdown}
         return meta, {u: np.asarray(f) for u, f in gflats.items()}
 
+    # --- ring data-plane phases (shared by sync rounds and overlap) -----
+    def _own_param_chunks(self) -> Dict[str, np.ndarray]:
+        return {g.name: np.asarray(self.state[g.name]["p"])
+                for g in self.sub.planner.groups}
+
+    def _ring_allgather(self, own: Dict[str, np.ndarray], lo: int, hi: int,
+                        tags: dict, comm: Dict[str, float]):
+        """Ring AllGatherv of every rank's own param chunks; returns the
+        per-origin chunk list."""
+        rank, n = self.spec.rank, self.spec.n_ranks
+        phase = f"allgather(p)[{lo},{hi})"
+        t0 = time.perf_counter()
+        gen = ring.allgatherv(rank, n, own)
+        if self.ring_links is None:
+            if n != 1:
+                raise RuntimeError(
+                    f"rank {rank}: ring round without ring links (n={n})")
+            got = ring.drive(gen, None)
+        else:
+            got = self.ring_links.run(gen, phase, tags)
+        comm["allgather_s"] += time.perf_counter() - t0
+        return got
+
+    def _ring_reduce_scatter(self, dest_chunks, lo: int, hi: int,
+                             tags: dict, comm: Dict[str, float]):
+        """Ring ReduceScatterv (accumulate half); returns the collected
+        per-origin raw chunks addressed to this rank."""
+        rank, n = self.spec.rank, self.spec.n_ranks
+        phase = f"reduce_scatter(G)[{lo},{hi})"
+        t0 = time.perf_counter()
+        gen = ring.reduce_scatterv(rank, n, dest_chunks)
+        if self.ring_links is None:
+            collected = ring.drive(gen, None)
+        else:
+            collected = self.ring_links.run(gen, phase, tags)
+        comm["reduce_scatter_s"] += time.perf_counter() - t0
+        return collected
+
+    def _round_compute(self, rd: dict) -> Tuple[dict, Optional[list]]:
+        """Compute one round on previously gathered params (``rd["got"]``
+        is the per-origin chunk list): returns (telemetry meta, the
+        per-destination gradient chunks for the ReduceScatterv — ``None``
+        when this rank is inactive or produced no gradients)."""
+        out_meta = {"loss": 0.0, "n_mb": 0, "t_wall": 0.0}
+        dest_chunks = None
+        if self.spec.rank in set(rd["active"]):
+            flats = self.sub.concat_slices(rd["got"], key=None)
+            out_meta, gflats = self._compute_round(
+                int(rd["lo"]), int(rd["hi"]), flats)
+            if gflats:
+                dest_chunks = self.sub.slice_flats(gflats)
+        return out_meta, dest_chunks
+
     def ring_round(self, meta: dict) -> dict:
-        """One collective round entirely on the peer-to-peer ring.
+        """One synchronous collective round on the peer-to-peer ring.
 
         The coordinator sent only control (``lo``/``hi`` plus the active
         rank set); params come from a ring AllGatherv of every worker's
@@ -333,37 +468,116 @@ class _Worker:
         too).
         """
         lo, hi = int(meta["lo"]), int(meta["hi"])
-        active = set(meta["active"])
-        rank, n = self.spec.rank, self.spec.n_ranks
-        links = self.ring_links
-        own = {g.name: np.asarray(self.state[g.name]["p"])
-               for g in self.sub.planner.groups}
-        phase = f"allgather(p)[{lo},{hi})"
-        if links is None:
-            if n != 1:
-                raise RuntimeError(
-                    f"rank {rank}: ring round without ring links (n={n})")
-            got = ring.drive(ring.allgatherv(rank, n, own), None)
-        else:
-            got = links.run(ring.allgatherv(rank, n, own), phase)
-        out_meta = {"loss": 0.0, "n_mb": 0, "t_wall": 0.0}
-        dest_chunks = None
-        if rank in active:
-            flats = self.sub.concat_slices(got, key=None)
-            out_meta, gflats = self._compute_round(lo, hi, flats)
-            if gflats:
-                dest_chunks = self.sub.slice_flats(gflats)
-        phase = f"reduce_scatter(G)[{lo},{hi})"
-        if links is None:
-            collected = ring.drive(
-                ring.reduce_scatterv(rank, n, dest_chunks), None)
-        else:
-            collected = links.run(
-                ring.reduce_scatterv(rank, n, dest_chunks), phase)
+        tags = {"round": int(meta.get("round", 0)),
+                "gstep": int(meta.get("gstep", 0))}
+        comm = _empty_comm()
+        own = self._own_param_chunks()
+        got = self._ring_allgather(own, lo, hi, tags, comm)
+        out_meta, dest_chunks = self._round_compute(
+            {"lo": lo, "hi": hi, "active": meta["active"], "got": got})
+        collected = self._ring_reduce_scatter(dest_chunks, lo, hi, tags,
+                                              comm)
         round_sum = ring.combine_fixed_order(collected)
         if round_sum is not None:
             self.accum_grads(round_sum)
+        # synchronous ring: the main thread drives the wire, so every
+        # communication second is exposed to the step's critical path
+        comm["exposed_allgather_s"] = comm["allgather_s"]
+        comm["exposed_reduce_scatter_s"] = comm["reduce_scatter_s"]
+        out_meta["comm"] = comm
         return out_meta
+
+    def ring_step(self, meta: dict) -> dict:
+        """One whole step of overlapped collective rounds.
+
+        The ring data plane moves to a dedicated communication thread
+        that executes the fixed global op order of
+        :func:`repro.core.engine.ring.overlap_plan`: round *k+1*'s
+        parameter AllGatherv prefetches while round *k*'s microbatches
+        compute on this (the main) thread, and round *k*'s gradient
+        ReduceScatterv drains under round *k+1*'s compute.  Handoffs go
+        through two queues — the double-buffered gathered-param and
+        outbound-grad slots; the op order structurally caps each at two
+        live entries (AG *k+2* cannot start before the grads of round
+        *k* were consumed), so prefetch depth never exceeds one round.
+
+        Numerics are untouched: params are frozen for the whole step
+        (Adam runs only after this method returns — the step barrier),
+        per-round sums still combine in fixed rank order, and rounds
+        still accumulate in round order on this rank's slice, so the
+        result stays bitwise-identical to the synchronous ring, the hub,
+        and loopback.  A comm-thread failure (peer death mid-prefetch,
+        timeout) is re-raised here, naming the rank and collective
+        phase, and forwarded to the coordinator like any worker error.
+        """
+        rounds = list(meta["rounds"])
+        gstep = int(meta.get("gstep", 0))
+        comm = _empty_comm()
+        if not rounds:
+            return {"rounds": [], "comm": comm}
+        own = self._own_param_chunks()
+        gathered_q: queue.Queue = queue.Queue()
+        outbound_q: queue.Queue = queue.Queue()
+        failure: List[BaseException] = []
+
+        def comm_main() -> None:
+            try:
+                for op, k in ring.overlap_plan(len(rounds)):
+                    rd = rounds[k]
+                    tags = {"round": int(rd["round"]), "gstep": gstep}
+                    lo, hi = int(rd["lo"]), int(rd["hi"])
+                    if op == "allgather":
+                        got = self._ring_allgather(own, lo, hi, tags, comm)
+                        gathered_q.put(got)
+                    else:
+                        item = outbound_q.get()
+                        if item is _ABORT:
+                            return
+                        collected = self._ring_reduce_scatter(
+                            item, lo, hi, tags, comm)
+                        round_sum = ring.combine_fixed_order(collected)
+                        if round_sum is not None:
+                            # RS ops run in round order, so cross-round
+                            # accumulation keeps the synchronous order
+                            self.accum_grads(round_sum)
+            except BaseException as e:   # noqa: BLE001 - re-raised on main
+                failure.append(e)
+                gathered_q.put(_COMM_FAILED)
+
+        comm_thread = threading.Thread(
+            target=comm_main, daemon=True,
+            name=f"cephalo-rank{self.spec.rank}-ring-comm")
+        if self.ring_links is not None:
+            # prefetch traffic is legitimate for the duration of this
+            # step: let early later-round messages park instead of
+            # tripping the synchronous out-of-protocol check
+            self.ring_links.out_of_order = True
+        comm_thread.start()
+        out_metas = []
+        try:
+            for rd in rounds:
+                t0 = time.perf_counter()
+                item = gathered_q.get()
+                comm["exposed_allgather_s"] += time.perf_counter() - t0
+                if item is _COMM_FAILED:
+                    raise failure[0]
+                out_meta, dest_chunks = self._round_compute(
+                    {**rd, "got": item})
+                out_metas.append(out_meta)
+                outbound_q.put(dest_chunks)
+            t0 = time.perf_counter()
+            comm_thread.join()   # step barrier: tail RS drains before Adam
+            comm["exposed_reduce_scatter_s"] += time.perf_counter() - t0
+            if failure:
+                raise failure[0]
+        except BaseException:
+            outbound_q.put(_ABORT)   # unblock a comm thread awaiting grads
+            comm_thread.join(timeout=self.spec.ring_timeout + 30.0)
+            raise
+        finally:
+            if self.ring_links is not None:
+                self.ring_links.out_of_order = False
+        return {"rounds": out_metas, "comm": comm}
 
     def accum_grads(self, arrays: Dict[str, np.ndarray]) -> None:
         sl = {k: np.asarray(v) for k, v in arrays.items()}
@@ -446,8 +660,11 @@ def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
             jax.distributed.initialize(spec.jax_coordinator,
                                        num_processes=spec.n_ranks,
                                        process_id=spec.rank)
-        except Exception:
-            pass
+        except Exception as e:  # noqa: BLE001 - best-effort, but reported
+            warnings.warn(
+                f"rank {spec.rank}: jax.distributed.initialize"
+                f"({spec.jax_coordinator!r}) failed ({e!r}); continuing "
+                "as a single-process backend", RuntimeWarning)
     links = None
     if ring_prev is not None and ring_next is not None:
         links = _RingLinks(spec.rank, spec.n_ranks,
@@ -484,11 +701,27 @@ def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
                 if worker.die_next_round:   # injected mid-collective death
                     os._exit(17)
                 channel.send("ring_done", worker.ring_round(meta))
+            elif tag == "ring_step":
+                if worker.die_next_round:   # injected mid-prefetch death
+                    os._exit(17)
+                channel.send("ring_step_done", worker.ring_step(meta))
             elif tag == "fault":
-                # fault injection for the bounded-wait tests: die the
-                # instant the next collective round arrives, so peers
-                # and coordinator observe a mid-collective death.
-                worker.die_next_round = meta.get("mode") == "die_next_round"
+                # fault injection for the stress tests: "die_next_round"
+                # exits the instant the next collective round (or
+                # overlapped step) arrives, so peers and coordinator
+                # observe a mid-collective death; "slow_ring" delays
+                # every forward send on this worker's outbound ring edge.
+                mode = meta.get("mode")
+                if mode == "die_next_round":
+                    worker.die_next_round = True
+                elif mode == "slow_ring":
+                    if worker.ring_links is None:
+                        raise ValueError(
+                            f"rank {spec.rank}: slow_ring fault needs "
+                            "ring links (topology='ring', n > 1)")
+                    worker.ring_links.delay = float(meta.get("delay", 0.0))
+                else:
+                    raise ValueError(f"unknown fault mode {mode!r}")
                 channel.send("ok")
             elif tag == "grad_accum":
                 worker.accum_grads(arrays)
@@ -684,17 +917,26 @@ class MultiProcessSubstrate(LoopbackSubstrate):
 
     # --- lifecycle ------------------------------------------------------
     def close(self) -> None:
+        """Shut the rank fleet down.  Idempotent; a worker that died (or
+        goes silent) during teardown is *reported* via ``warnings.warn``
+        — never silently swallowed — and then reaped with terminate."""
         for rank, ch in enumerate(self.channels):
             proc = self.procs[rank]
             try:
                 if proc.is_alive():
                     ch.send("exit")
                     ch.recv(timeout=5.0, alive=proc.is_alive)
-            except Exception:
-                pass
-        for proc in self.procs:
+            except (EOFError, OSError, TimeoutError) as e:
+                warnings.warn(
+                    f"rank {rank} worker did not acknowledge exit "
+                    f"(exitcode {proc.exitcode}): {e!r}; terminating it",
+                    RuntimeWarning)
+        for rank, proc in enumerate(self.procs):
             proc.join(timeout=5.0)
             if proc.is_alive():
+                warnings.warn(
+                    f"rank {rank} worker (pid {proc.pid}) survived exit; "
+                    "sending SIGTERM", RuntimeWarning)
                 proc.terminate()
                 proc.join(timeout=5.0)
         for ch in self.channels:
@@ -705,7 +947,10 @@ class MultiProcessSubstrate(LoopbackSubstrate):
     def __del__(self):   # best-effort backstop; close() is the real API
         try:
             self.close()
-        except Exception:
+        except Exception:   # noqa: BLE001 - interpreter-shutdown races
+            # (modules half-torn-down, warnings machinery gone) make any
+            # reporting here unreliable; close() itself warns when
+            # invoked normally, so the backstop stays silent by design.
             pass
 
 
@@ -716,6 +961,7 @@ class ProcessEngine(TrainEngine):
                  adam: AdamConfig, seq_len: int, *,
                  transport: Optional[str] = None,
                  topology: Optional[str] = None,
+                 overlap_rounds: Optional[bool] = None,
                  start_method: str = "spawn",
                  reply_timeout: float = REPLY_TIMEOUT,
                  ring_timeout: float = RING_TIMEOUT,
@@ -727,6 +973,21 @@ class ProcessEngine(TrainEngine):
         self.n = plan.n
         transport = resolve_transport(transport)
         self.topology = resolve_topology(topology)
+        self.overlap = resolve_overlap(overlap_rounds)
+        if self.overlap and self.topology != "ring":
+            if overlap_rounds:
+                raise ValueError(
+                    "overlap_rounds=True needs topology='ring': the hub "
+                    "topology's coordinator request→reply data plane has "
+                    "no prefetch lane (pass topology='ring' or set "
+                    "CEPHALO_MP_TOPOLOGY=ring)")
+            # env-resolved overlap on a hub fleet: the env default stays
+            # inert (mirrors how CEPHALO_MP_TOPOLOGY behaves off-substrate)
+            warnings.warn(
+                "CEPHALO_MP_OVERLAP is set but the topology is "
+                f"{self.topology!r}; round overlap needs the ring data "
+                "plane — running synchronous rounds", RuntimeWarning)
+            self.overlap = False
         ratios = normalized_ratios(plan.state_ratios())
         self.planner = UnitPlanner(cfg, ratios)
         specs = [WorkerSpec(rank=r.rank, cfg=cfg,
@@ -751,6 +1012,15 @@ class ProcessEngine(TrainEngine):
         self.last_step_walls: Dict[int, float] = {}
         #: coordinator-side wall seconds of the last whole step.
         self.last_step_wall_s = 0.0
+        #: rank -> per-phase ring comm seconds of the last step
+        #: (:data:`COMM_KEYS`: total AllGatherv / ReduceScatterv wire
+        #: time plus the *exposed* share the compute thread stalled on).
+        #: Empty on hub steps — the hub's data plane is coordinator-side.
+        self.last_step_comm: Dict[int, Dict[str, float]] = {}
+        #: engine step counter used to tag ring messages (uniqueness
+        #: within this fleet's life is all that matters — replans respawn
+        #: the fleet and may reset it).
+        self._gstep = 0
 
     # --- TrainEngine surface -------------------------------------------
     def init_state(self, key: jax.Array) -> Dict[str, int]:
@@ -780,7 +1050,12 @@ class ProcessEngine(TrainEngine):
         microbatch work itself runs concurrently in the rank processes.
         On the ``ring`` topology the coordinator's part of each round is
         control-plane only — one ``ring_round`` broadcast and per-rank
-        meta replies; params and gradients move worker↔worker.
+        meta replies; params and gradients move worker↔worker.  With
+        ``overlap_rounds`` the whole step's round list goes out in a
+        single ``ring_step`` broadcast and each worker pipelines the
+        rounds on its communication thread — the reply (and the Adam
+        barrier behind it) arrives only after the tail ReduceScatterv
+        drained.
         """
         t_step0 = time.perf_counter()
         big = np.asarray(big)
@@ -809,28 +1084,38 @@ class ProcessEngine(TrainEngine):
             arrays=payloads, ranks=active, phase="step_begin")
 
         total_loss = 0.0
-        any_grads = False
         walls = {r: 0.0 for r in active}
         n_mb = {r: 0 for r in active}
+        rounds = []
         mb_off = 0
         for size in self.schedule.chunks(max(plan.ell_pad, 1)):
             lo, hi = mb_off, mb_off + size
             mb_off += size
             rnd = [r.rank for r in plan.ranks
                    if r.b > 0 and min(lo, r.ell) < min(hi, r.ell)]
-            if self.topology == "ring":
-                round_metas = self._ring_collective_round(lo, hi, rnd)
-            else:
-                round_metas = self._hub_collective_round(lo, hi, rnd)
-            if round_metas is None:
-                continue
+            rounds.append((lo, hi, rnd))
+        self._gstep += 1
+        self.last_step_comm = {}
+        if self.topology == "ring" and self.overlap:
+            step_metas = self._ring_overlap_step(rounds)
+        else:
+            step_metas = []
+            for idx, (lo, hi, rnd) in enumerate(rounds):
+                if self.topology == "ring":
+                    round_metas = self._ring_collective_round(
+                        lo, hi, rnd, round_idx=idx)
+                else:
+                    round_metas = self._hub_collective_round(lo, hi, rnd)
+                if round_metas is not None:
+                    step_metas.append(round_metas)
+        any_grads = bool(step_metas)
+        for round_metas in step_metas:
             for rank, meta in round_metas:
                 if meta["n_mb"] == 0:
                     continue
                 total_loss += meta["loss"]
                 walls[rank] += meta["t_wall"]
                 n_mb[rank] += meta["n_mb"]
-            any_grads = True
         if not any_grads:
             # zero-gradient step (every active rank has ell_i == 0):
             # no optimizer update, state unchanged — same contract as
@@ -866,42 +1151,104 @@ class ProcessEngine(TrainEngine):
             "round", metas=[{"lo": lo, "hi": hi}] * len(rnd),
             arrays=[p_arrays] * len(rnd), ranks=rnd,
             phase=f"round[{lo},{hi})")
-        sums: Optional[Dict[str, np.ndarray]] = None
         out = []
+        contribs: List[Optional[Dict[str, np.ndarray]]] = []
         for rank, (meta, arrs) in zip(rnd, replies):
             out.append((rank, meta))
-            if meta["n_mb"] == 0:
-                continue
-            g = {k.split("|", 1)[1]: v for k, v in arrs.items()}
-            if sums is None:
-                sums = {u: np.array(v, dtype=np.float32)
-                        for u, v in g.items()}
-            else:
-                for u in sums:
-                    sums[u] += g[u]
+            contribs.append(
+                None if meta["n_mb"] == 0 else
+                {k.split("|", 1)[1]: v for k, v in arrs.items()})
+        # one authoritative reduction: the replies are already in rank
+        # order, so combine_fixed_order gives the union-over-unit-keys
+        # rank-order sum — bitwise the same contract the ring applies at
+        # each destination
+        sums = ring.combine_fixed_order(contribs)
         if sums is None:
             return None
         self.substrate.scatter_grad_flats(sums)             # ReduceScatterv
         return out
 
-    def _ring_collective_round(self, lo: int, hi: int,
-                               rnd: List[int]
+    def _ring_collective_round(self, lo: int, hi: int, rnd: List[int],
+                               round_idx: int = 0
                                ) -> Optional[List[Tuple[int, dict]]]:
-        """Ring topology: control-plane only — every worker (active or
-        not: inactive ranks still forward ring traffic and still own a
-        gradient slice) runs the round's ring AllGatherv + ring
-        ReduceScatterv peer-to-peer and replies with telemetry meta.
-        The collective event counters mirror the hub/loopback structure
-        so round-structure assertions stay substrate-independent."""
+        """Ring topology, synchronous rounds: control-plane only — every
+        worker (active or not: inactive ranks still forward ring traffic
+        and still own a gradient slice) runs the round's ring AllGatherv
+        + ring ReduceScatterv peer-to-peer and replies with telemetry
+        meta.  The collective event counters mirror the hub/loopback
+        structure so round-structure assertions stay
+        substrate-independent."""
         self.substrate.stats["all_gather"] += 1
         if not rnd:
             return None
-        meta = {"lo": lo, "hi": hi, "active": list(rnd)}
+        meta = {"lo": lo, "hi": hi, "active": list(rnd),
+                "round": round_idx, "gstep": self._gstep}
         replies = self.substrate.request_all(
             "ring_round", metas=[meta] * self.n,
             phase=f"ring round[{lo},{hi})")
         self.substrate.stats["reduce_scatter"] += 1
+        for rank, (r_meta, _) in enumerate(replies):
+            self._merge_comm(rank, r_meta.get("comm"))
         return [(rank, r_meta) for rank, (r_meta, _) in enumerate(replies)]
+
+    def _ring_overlap_step(self, rounds: List[Tuple[int, int, List[int]]]
+                           ) -> List[List[Tuple[int, dict]]]:
+        """Ring topology, overlapped rounds: ONE control-plane broadcast
+        carries the whole step's round list; each worker pipelines the
+        rounds on its communication thread (prefetching gathers under
+        compute, draining scatters under the next round's compute) and
+        replies with per-round telemetry after its tail ReduceScatterv —
+        the only barrier before Adam.  Collective event counters follow
+        the same per-round structure as the synchronous paths, so the
+        parity matrix's stats assertions hold across overlap too."""
+        payload_rounds = []
+        for idx, (lo, hi, rnd) in enumerate(rounds):
+            self.substrate.stats["all_gather"] += 1
+            if not rnd:
+                continue
+            self.substrate.stats["reduce_scatter"] += 1
+            payload_rounds.append({"round": idx, "lo": lo, "hi": hi,
+                                   "active": list(rnd)})
+        if not payload_rounds:
+            return []
+        meta = {"rounds": payload_rounds, "gstep": self._gstep}
+        replies = self.substrate.request_all(
+            "ring_step", metas=[meta] * self.n,
+            phase=f"ring step({len(payload_rounds)} rounds)")
+        for rank, (r_meta, _) in enumerate(replies):
+            self._merge_comm(rank, r_meta.get("comm"))
+        return [[(rank, r_meta["rounds"][i])
+                 for rank, (r_meta, _) in enumerate(replies)]
+                for i in range(len(payload_rounds))]
+
+    # --- comm telemetry -------------------------------------------------
+    def _merge_comm(self, rank: int, comm: Optional[dict]) -> None:
+        if not comm:
+            return
+        agg = self.last_step_comm.setdefault(rank, _empty_comm())
+        for key, val in comm.items():
+            agg[key] = agg.get(key, 0.0) + float(val)
+
+    def hidden_comm_fraction(self, comm: Optional[Dict[int, Dict[str,
+                             float]]] = None) -> Dict[int, float]:
+        """Per-rank fraction of ring communication hidden under compute:
+        ``1 − exposed/total``.  Synchronous rounds report ~0.0
+        (everything the wire did, the compute thread waited for);
+        overlapped rounds report whatever the prefetch actually hid.
+        Reads the last step's telemetry by default; pass ``comm`` (same
+        shape as :attr:`last_step_comm`, e.g. summed over many steps) to
+        evaluate an aggregate.  Empty for hub steps (no worker-side
+        wire)."""
+        comm = self.last_step_comm if comm is None else comm
+        out: Dict[int, float] = {}
+        for rank, c in comm.items():
+            total = c.get("allgather_s", 0.0) + \
+                c.get("reduce_scatter_s", 0.0)
+            exposed = c.get("exposed_allgather_s", 0.0) + \
+                c.get("exposed_reduce_scatter_s", 0.0)
+            out[rank] = max(0.0, 1.0 - exposed / total) if total > 0 \
+                else 0.0
+        return out
 
     def gather_params(self, state) -> Dict[str, Any]:
         return self.substrate.allgather_params(None, "p")
@@ -947,6 +1294,18 @@ class ProcessEngine(TrainEngine):
         if not 0 <= rank < self.n:
             raise ValueError(f"rank {rank} out of range for n={self.n}")
         self.substrate.request(rank, "fault", {"mode": "die_next_round"})
+
+    def inject_ring_delay(self, rank: int, delay_s: float) -> None:
+        """Fault injection: make ``rank``'s outbound ring edge slow —
+        every forward send sleeps ``delay_s`` first.  Rounds must still
+        complete, in order, bitwise-identical (the overlap stress
+        tests); pass 0.0 to restore the edge."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} out of range for n={self.n}")
+        if delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {delay_s}")
+        self.substrate.request(rank, "fault",
+                               {"mode": "slow_ring", "delay": delay_s})
 
     # --- MPMD extras (launcher surface) --------------------------------
     def memory_report(self, state) -> str:

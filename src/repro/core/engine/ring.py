@@ -140,19 +140,64 @@ def combine_fixed_order(collected: Sequence[Optional[Chunks]]
     This is the "combine" half of accumulate-then-combine: fp32
     accumulation in exactly the order the hub coordinator (and
     loopback's rank-major tree sum) uses, so the result is bitwise
-    identical across topologies.  Returns ``None`` when no rank
-    contributed (a round where every rank exhausted its ℓ_i).
+    identical across topologies.  Contributors may carry different unit
+    sets (a rank whose program touched only some units); each unit is
+    summed over the ranks that carry it, still in rank order.  Returns
+    ``None`` when no rank contributed (a round where every rank
+    exhausted its ℓ_i).
     """
     out: Optional[Chunks] = None
     for chunks in collected:
         if chunks is None:
             continue
         if out is None:
-            out = {u: np.array(a, dtype=np.float32) for u, a in chunks.items()}
-        else:
-            for u in out:
-                out[u] = out[u] + np.asarray(chunks[u], dtype=np.float32)
+            out = {}
+        for u, a in chunks.items():
+            a32 = np.asarray(a, dtype=np.float32)
+            out[u] = out[u] + a32 if u in out \
+                else np.array(a32, dtype=np.float32)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Overlapped round pipeline: the fixed global data-plane order
+# ---------------------------------------------------------------------------
+
+def overlap_plan(n_rounds: int) -> List[tuple]:
+    """Data-plane op order for the overlapped round pipeline.
+
+    Returns ``[("allgather", k) | ("reduce_scatter", k), ...]`` — the
+    exact sequence every worker's communication thread executes when
+    round-level overlap is on::
+
+        AG0, AG1, RS0, AG2, RS1, ..., AG_{R-1}, RS_{R-2}, RS_{R-1}
+
+    Round ``k+1``'s parameter AllGatherv is *prefetched* while round
+    ``k``'s microbatches compute (params are frozen for the whole step —
+    Adam runs only at the step barrier — so the prefetch reads the same
+    bytes a synchronous gather would), and round ``k``'s gradient
+    ReduceScatterv drains under round ``k+1``'s compute.  Because every
+    rank follows this one order, the per-channel message sequence is
+    identical on all workers and the pipeline cannot deadlock; because
+    the *reduction* order (accumulate-then-combine per round, rounds
+    accumulated in round order) is untouched, results stay bitwise
+    identical to the synchronous ring, the hub, and loopback.
+
+    Invariants (property-tested in ``tests/test_layout_properties.py``):
+    every round appears exactly once per phase, ``("allgather", k)``
+    precedes ``("reduce_scatter", k)``, reduce-scatters run in round
+    order, and the allgather prefetch depth never exceeds one round.
+    """
+    if n_rounds < 0:
+        raise ValueError(f"n_rounds must be >= 0, got {n_rounds}")
+    ops: List[tuple] = []
+    for k in range(n_rounds):
+        if k == 0:
+            ops.append(("allgather", 0))
+        if k + 1 < n_rounds:
+            ops.append(("allgather", k + 1))
+        ops.append(("reduce_scatter", k))
+    return ops
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,11 @@ ones (DESIGN.md §Engine):
   activations stay live; because round *k*+1's AllGathers are data-
   independent of round *k*'s ReduceScatters, an async runtime (or XLA's
   latency-hiding scheduler) can overlap the tail scatter of one round
-  with the head gather of the next.
+  with the head gather of the next.  The multiproc ring substrate's
+  overlapped pipeline (``overlap_rounds=True``,
+  :mod:`repro.core.engine.multiproc`) delivers exactly that for any
+  multi-round schedule: round *k*+1's gathers prefetch under round
+  *k*'s compute, bitwise-identically to the synchronous walk.
 
 Adding a schedule is one call::
 

@@ -17,7 +17,11 @@ collectives of the paper's Fig. 4 rounds happen; substrates decide
   same, which is the seam
   :class:`repro.core.engine.multiproc.MultiProcessSubstrate` implements
   with one OS process per rank (the shards live in the workers, the
-  collectives move real bytes between processes).
+  collectives move real bytes between processes — synchronously per
+  round, or pipelined under compute on the ring topology's overlapped
+  mode).  Substrates decide *how* and may decide *when the bytes move*,
+  but never the reduction order: that is what keeps every substrate in
+  the bitwise-parity club.
 
 The loopback substrate counts collective *events* (``stats``) so tests
 can assert a schedule's round structure without parsing HLO.  The

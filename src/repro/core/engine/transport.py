@@ -21,6 +21,13 @@ and array payloads over one of two data planes:
 Select with ``CEPHALO_MP_TRANSPORT=shm|pipe`` or the engine's
 ``transport=`` knob.  Both planes carry identical bytes — the parity
 tests run the same step on either.
+
+Coordinator↔worker channels are strict request→reply; the worker↔worker
+ring channels additionally support tag-matched out-of-order receive
+(:meth:`Channel.recv_match`) so the overlapped round pipeline's
+prefetch traffic (round *k+1* gathers in flight under round *k*'s
+compute, ``CEPHALO_MP_OVERLAP=1``) can never be mistaken for the
+current round's payload.
 """
 
 from __future__ import annotations
@@ -28,6 +35,8 @@ from __future__ import annotations
 import os
 import pickle
 import secrets
+import warnings
+from time import monotonic as _monotonic
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -59,6 +68,22 @@ def resolve_topology(name: Optional[str] = None) -> str:
         raise ValueError(
             f"unknown topology {name!r}; choose from {TOPOLOGIES}")
     return name
+
+
+def resolve_overlap(value: Optional[bool] = None) -> bool:
+    """Round-overlap selection: explicit arg > ``$CEPHALO_MP_OVERLAP`` >
+    off.  The env var accepts 1/true/yes/on (any case) for on and
+    0/false/no/off for off."""
+    if value is not None:
+        return bool(value)
+    raw = os.environ.get("CEPHALO_MP_OVERLAP", "")
+    if raw.lower() in ("", "0", "false", "no", "off"):
+        return False
+    if raw.lower() in ("1", "true", "yes", "on"):
+        return True
+    raise ValueError(
+        f"CEPHALO_MP_OVERLAP={raw!r} not understood; use 1/true/yes/on "
+        "or 0/false/no/off")
 
 
 def _try_import_shm():
@@ -99,7 +124,13 @@ class ShmArena:
             seg = self._shm_mod.SharedMemory(
                 name=f"cephalo_{os.getpid()}_{secrets.token_hex(4)}",
                 create=True, size=want)
-        except Exception:
+        except OSError as e:
+            # /dev/shm full or unwritable: degrade to the pipe plane for
+            # the rest of this channel's life — loudly, not silently
+            warnings.warn(
+                f"shared-memory arena creation failed ({e!r}); falling "
+                f"back to the pipe data plane for this channel",
+                RuntimeWarning, stacklevel=2)
             self.disabled = True
             return False
         self.close()
@@ -141,16 +172,24 @@ class ShmArena:
         return out
 
     def close(self) -> None:
+        """Detach (and, for the owner, unlink) the segment.  Idempotent;
+        an already-gone segment (peer unlinked first, interpreter
+        shutdown races) is expected and stays quiet, anything else is
+        reported."""
         if self.seg is None:
             return
+        seg, self.seg, self.name = self.seg, None, None
         try:
-            self.seg.close()
+            seg.close()
             if self.owner:
-                self.seg.unlink()
-        except Exception:
-            pass
-        self.seg = None
-        self.name = None
+                seg.unlink()
+        except FileNotFoundError:
+            pass    # peer (or a previous close) already unlinked it
+        except (OSError, BufferError) as e:
+            warnings.warn(
+                f"shared-memory arena teardown failed ({e!r}); the "
+                f"segment may leak until process exit",
+                RuntimeWarning, stacklevel=2)
 
 
 class Channel:
@@ -159,8 +198,12 @@ class Channel:
     Each message is ``(tag, meta, arrays)``: a pickled ``(tag, meta,
     manifest)`` header frame followed (pipe mode) by one bytes frame per
     array, or (shm mode) by nothing — the header's manifest points into
-    the sender's arena.  Strictly alternating request→reply per channel;
-    the substrate enforces that calling pattern.
+    the sender's arena.  Coordinator↔worker channels stay strictly
+    alternating request→reply; the worker↔worker ring channels of the
+    overlapped round pipeline instead use :meth:`recv_match` — a
+    tag-matched out-of-order receive that parks messages for a *later*
+    round in a pending buffer, so prefetch traffic can never be
+    mistaken for the current round's payload.
     """
 
     def __init__(self, conn, transport: str = DEFAULT_TRANSPORT):
@@ -171,6 +214,10 @@ class Channel:
         # arena and attaches read-only to the peer's by announced name.
         self._send_arena = ShmArena(owner=True) if use_shm else None
         self._recv_arena = ShmArena(owner=False) if use_shm else None
+        #: messages received but not yet claimed by a recv/recv_match
+        #: (arrays are copied out of the peer's arena on arrival, so
+        #: parking a message never blocks the sender's arena reuse).
+        self._pending: List[Tuple[str, dict, Dict[str, np.ndarray]]] = []
         #: data-plane accounting: array payload bytes by message tag,
         #: each direction (headers/metas excluded — those are the
         #: control plane).  The throughput benchmark reads these to
@@ -205,7 +252,81 @@ class Channel:
              alive=None) -> Tuple[str, dict, Dict[str, np.ndarray]]:
         """Blocking receive; with ``timeout``, polls in 50ms slices and
         calls ``alive()`` between slices so a dead peer raises instead of
-        hanging forever."""
+        hanging forever.  Messages parked by :meth:`recv_match` are
+        delivered first, in arrival order."""
+        if self._pending:
+            return self._pending.pop(0)
+        return self._recv_wire(timeout, alive)
+
+    #: recv_match parks at most this many unmatched messages before
+    #: declaring a protocol error.  The overlap pipeline's prefetch
+    #: depth bounds legitimate parking to a handful of in-flight
+    #: messages per channel; unbounded growth means the peer is sending
+    #: traffic this endpoint will never claim.
+    MAX_PENDING = 64
+
+    def recv_match(self, tag: str, match: dict,
+                   timeout: Optional[float] = None,
+                   alive=None, stale=None
+                   ) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+        """Tag-matched out-of-order receive.
+
+        Returns the first message (pending buffer first, then the wire)
+        whose tag equals ``tag`` and whose meta contains every ``match``
+        item; non-matching messages are parked in arrival order for a
+        later ``recv``/``recv_match``.  This is what lets the overlapped
+        ring pipeline prefetch round *k+1* traffic while round *k* is
+        still draining: a receiver waiting for round *k* simply parks any
+        early round-*k+1* payload instead of mistaking it for its own.
+        ``timeout`` bounds the *total* wait across parked mismatches.
+
+        Two fail-fast guards keep a protocol error from stalling until
+        the timeout: ``stale`` — an optional ``meta -> bool`` predicate
+        naming messages that can *never* be claimed (e.g. a ring message
+        from an already-completed engine step), which are dropped with a
+        warning instead of parked — and :data:`MAX_PENDING`, beyond
+        which parking raises immediately.
+        """
+        for i, (t, m, a) in enumerate(self._pending):
+            if t == tag and all(m.get(k) == v for k, v in match.items()):
+                return self._pending.pop(i)
+        waited = 0.0
+        while True:
+            left = None if timeout is None else max(timeout - waited, 0.0)
+            t0 = _monotonic()
+            try:
+                got = self._recv_wire(left, alive)
+            except TimeoutError as e:
+                raise self._match_timeout(tag, match, timeout) from e
+            waited += _monotonic() - t0
+            t, m, _ = got
+            if t == tag and all(m.get(k) == v for k, v in match.items()):
+                return got
+            if stale is not None and stale(m):
+                warnings.warn(
+                    f"dropping stale {t!r} message (meta {m}) that can "
+                    f"no longer be claimed while waiting for {tag!r} "
+                    f"{match}", RuntimeWarning)
+                continue
+            self._pending.append(got)
+            if len(self._pending) > self.MAX_PENDING:
+                raise RuntimeError(
+                    f"protocol error: {len(self._pending)} unmatched "
+                    f"messages parked while waiting for {tag!r} {match} "
+                    f"(first parked: "
+                    f"{[(p[0], p[1]) for p in self._pending[:4]]})")
+            if timeout is not None and waited >= timeout:
+                raise self._match_timeout(tag, match, timeout)
+
+    def _match_timeout(self, tag: str, match: dict,
+                       timeout: float) -> TimeoutError:
+        return TimeoutError(
+            f"no {tag!r} message matching {match} within {timeout:.1f}s "
+            f"({len(self._pending)} unmatched parked: "
+            f"{[(p[0], p[1]) for p in self._pending[:4]]})")
+
+    def _recv_wire(self, timeout: Optional[float] = None,
+                   alive=None) -> Tuple[str, dict, Dict[str, np.ndarray]]:
         if timeout is not None:
             waited = 0.0
             while not self.conn.poll(0.05):
@@ -231,10 +352,16 @@ class Channel:
         return tag, meta, arrays
 
     def close(self) -> None:
+        """Release arenas and the pipe connection.  Idempotent; a
+        connection that is already gone (peer died, double close) is
+        expected and stays quiet, anything else is reported."""
         for arena in (self._send_arena, self._recv_arena):
             if arena is not None:
                 arena.close()
+        self._pending = []
         try:
             self.conn.close()
-        except Exception:
-            pass
+        except OSError as e:
+            warnings.warn(
+                f"channel connection close failed ({e!r})",
+                RuntimeWarning, stacklevel=2)

@@ -17,7 +17,11 @@ Two substrates (``repro.core.engine.build_train_step``):
   ``--topology hub`` (default) routes collective payloads through the
   coordinator; ``--topology ring`` moves them over peer-to-peer
   worker↔worker ring channels and keeps the coordinator control-plane
-  only (also selectable via ``CEPHALO_MP_TOPOLOGY``).
+  only (also selectable via ``CEPHALO_MP_TOPOLOGY``).  ``--overlap``
+  (ring only, also ``CEPHALO_MP_OVERLAP=1``) pipelines the collective
+  rounds: each worker prefetches round *k+1*'s parameter AllGatherv on
+  a dedicated comm thread while round *k* computes, hiding ring
+  latency without changing a single bit of the result.
 
 ``--ga-mode`` selects any registered gradient-accumulation schedule
 (layered / per_microbatch / interleaved / ...) on either substrate.
@@ -74,7 +78,10 @@ def _train_loop(engine, args, plan, state=None, on_step=None) -> object:
                                         seed=args.seed))
     if state is None:
         state = engine.init_state(jax.random.PRNGKey(args.seed))
-    t0 = time.time()
+    # perf_counter, not time.time(): step wall time feeds the elastic
+    # planner's wall-clock oracle, and an NTP adjustment mid-run must
+    # not corrupt it (monotonic clocks can't step backwards)
+    t0 = time.perf_counter()
     for step in range(args.steps):
         if on_step is not None:
             on_step(step)
@@ -82,7 +89,7 @@ def _train_loop(engine, args, plan, state=None, on_step=None) -> object:
         state, loss = engine.step(state, big)
         if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
             print(f"step {step:>5} loss {float(loss):.4f} "
-                  f"({time.time() - t0:.1f}s wall)")
+                  f"({time.perf_counter() - t0:.1f}s wall)")
     return state
 
 
@@ -149,6 +156,12 @@ def run_mpmd(args) -> None:
     if args.substrate == "multiproc":
         # explicit flag > $CEPHALO_MP_TOPOLOGY > hub
         substrate_kw["topology"] = resolve_topology(args.topology)
+        if args.overlap:
+            if substrate_kw["topology"] != "ring":
+                raise SystemExit(
+                    "--overlap needs --topology ring (the hub data "
+                    "plane has no prefetch lane)")
+            substrate_kw["overlap_rounds"] = True
     engine = build_train_step(cfg, plan, schedule=args.ga_mode,
                               substrate=args.substrate,
                               adam=AdamConfig(lr=args.lr),
@@ -233,6 +246,11 @@ def main() -> None:
                          "payloads through the coordinator, ring moves "
                          "them peer-to-peer (default: "
                          "$CEPHALO_MP_TOPOLOGY or hub)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap ring rounds: prefetch each round's "
+                         "AllGatherv under the previous round's compute "
+                         "on a per-worker comm thread (multiproc + "
+                         "--topology ring; also $CEPHALO_MP_OVERLAP=1)")
     ap.add_argument("--elastic", action="store_true",
                     help="enable the replanning runtime (mpmd only)")
     ap.add_argument("--straggler", default="",
@@ -252,6 +270,9 @@ def main() -> None:
         # default is a multiproc knob and stays inert elsewhere
         raise SystemExit("--topology applies to --substrate multiproc "
                          "(loopback has no wire at all)")
+    if args.overlap and args.substrate != "multiproc":
+        raise SystemExit("--overlap applies to --substrate multiproc "
+                         "with --topology ring")
     if args.runtime == "mpmd":
         run_mpmd(args)
     else:

@@ -1,18 +1,22 @@
-"""Multi-process MPMD substrate tests (ISSUE 3 tentpole, ISSUE 4 ring).
+"""Multi-process MPMD substrate tests (ISSUE 3 tentpole, ISSUE 4 ring,
+ISSUE 5 overlapped rounds).
 
 Four layers:
 
 * **transport** — the array channel (header over the socket pair, bulk
   over shared-memory arenas or inline) round-trips dtypes/shapes, grows
-  arenas, bounds its waits, and accounts data-plane bytes, on both
-  planes;
+  arenas, bounds its waits, accounts data-plane bytes, and delivers
+  tag-matched out-of-order receives (the overlap pipeline's prefetch
+  guarantee), on both planes;
 * **migration** — state exported from a live fleet (hub or ring
-  topology) migrates across the process boundary exactly, and the
-  wall-clock telemetry comes out of real worker processes.  (Bitwise
-  step parity across substrates lives in ``test_parity_matrix.py``.)
-* **fault injection** — a worker that dies mid-collective surfaces a
-  RuntimeError naming the rank and phase, on both topologies, instead
-  of hanging the fleet;
+  topology, sync or overlapped rounds) migrates across the process
+  boundary exactly, and the wall-clock + ring-comm telemetry comes out
+  of real worker processes.  (Bitwise step parity across substrates
+  lives in ``test_parity_matrix.py``.)
+* **fault injection** — a worker that dies mid-collective (including
+  mid-prefetch on the overlapped pipeline) surfaces a RuntimeError
+  naming the rank and phase instead of hanging the fleet, and a
+  deliberately slow ring edge neither deadlocks nor reorders rounds;
 * **wall-clock elastic cycle** — an injected slowdown makes a worker
   process *actually* slower; the elastic engine must observe it in real
   wall-clock telemetry, refit, replan, and migrate.
@@ -102,6 +106,38 @@ def test_shm_arena_grows_and_pipe_fallback():
         rx.close()
 
 
+def test_shm_failure_warns_and_falls_back_to_pipe():
+    """Shared-memory breakage degrades loudly, not silently: a failed
+    arena creation warns and reroutes the payload over the pipe plane;
+    tearing down an already-unlinked segment stays quiet (expected
+    during shutdown races)."""
+
+    class _BrokenShm:
+        def SharedMemory(self, *a, **kw):
+            raise OSError("no /dev/shm today")
+
+    a, b = mp.Pipe(duplex=True)
+    tx, rx = Channel(a, transport="shm"), Channel(b, transport="shm")
+    try:
+        tx._send_arena._shm_mod = _BrokenShm()
+        payload = {"x": np.arange(8, dtype=np.float32)}
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            tx.send("m", None, payload)
+        _, _, got = rx.recv()
+        np.testing.assert_array_equal(got["x"], payload["x"])
+        assert tx._send_arena.disabled
+    finally:
+        tx.close()
+        rx.close()
+    # an arena whose segment the peer already unlinked closes quietly
+    arena = ShmArena(owner=True)
+    if not arena.disabled and arena._ensure(1 << 12):
+        arena.seg.unlink()
+        arena.close()       # FileNotFoundError path: no warning, no raise
+        assert arena.seg is None
+        arena.close()       # idempotent
+
+
 def test_channel_recv_bounded_wait():
     """Receives are bounded: a silent peer raises TimeoutError within
     the window, a dead peer raises EOFError via the alive() probe —
@@ -137,6 +173,67 @@ def test_channel_accounts_data_plane_bytes(transport):
         rx.close()
 
 
+@pytest.mark.parametrize("transport", ["pipe", "shm"])
+def test_channel_recv_match_out_of_order(transport):
+    """Tag-matched receive delivers the requested (tag, meta) message
+    even when other traffic arrives first, parking mismatches for later
+    receives in arrival order — the guarantee that keeps the overlap
+    pipeline's prefetch traffic out of the current round's hands."""
+    a, b = mp.Pipe(duplex=True)
+    tx, rx = Channel(a, transport=transport), Channel(b, transport=transport)
+    try:
+        early = {"x": np.arange(4, dtype=np.float32)}
+        want = {"y": np.arange(6, dtype=np.float32)}
+        tx.send("ring", {"round": 1, "step": 0}, early)   # prefetch traffic
+        tx.send("ring_ack", {"round": 0, "step": 0})
+        tx.send("ring", {"round": 0, "step": 0}, want)    # current round
+        tag, meta, arrays = rx.recv_match("ring", {"round": 0, "step": 0},
+                                          timeout=5.0)
+        assert (tag, meta["round"]) == ("ring", 0)
+        np.testing.assert_array_equal(arrays["y"], want["y"])
+        # parked messages drain in arrival order via plain recv ...
+        tag, meta, arrays = rx.recv()
+        assert (tag, meta["round"]) == ("ring", 1)
+        np.testing.assert_array_equal(arrays["x"], early["x"])
+        # ... or by a later match
+        tag, meta, _ = rx.recv_match("ring_ack", {"round": 0}, timeout=5.0)
+        assert tag == "ring_ack"
+        # a match that never arrives times out and reports the parked mess
+        tx.send("ring", {"round": 9, "step": 9}, {})
+        with pytest.raises(TimeoutError, match="parked"):
+            rx.recv_match("ring", {"round": 2, "step": 2}, timeout=0.2)
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_channel_recv_match_fail_fast_guards():
+    """Protocol errors surface immediately, not after the ring timeout:
+    provably-unclaimable messages (the ``stale`` predicate — e.g. a ring
+    message from a completed engine step) are dropped with a warning,
+    and a runaway parked buffer raises instead of growing forever."""
+    a, b = mp.Pipe(duplex=True)
+    tx, rx = Channel(a, transport="pipe"), Channel(b, transport="pipe")
+    try:
+        tx.send("ring", {"gstep": 1, "round": 0}, {})   # stale (old step)
+        tx.send("ring", {"gstep": 2, "round": 0},
+                {"x": np.ones(3, np.float32)})
+        with pytest.warns(RuntimeWarning, match="stale"):
+            tag, meta, arrays = rx.recv_match(
+                "ring", {"gstep": 2, "round": 0}, timeout=5.0,
+                stale=lambda m: m.get("gstep", 2) < 2)
+        assert meta["gstep"] == 2 and "x" in arrays
+        assert rx._pending == []            # the stale one was dropped
+        # parked-buffer cap: a flood of never-matching traffic raises
+        for i in range(Channel.MAX_PENDING + 1):
+            tx.send("ring", {"gstep": 99, "round": i}, {})
+        with pytest.raises(RuntimeError, match="protocol error"):
+            rx.recv_match("ring", {"gstep": 3, "round": 0}, timeout=30.0)
+    finally:
+        tx.close()
+        rx.close()
+
+
 def test_resolve_topology():
     from repro.core.engine.transport import resolve_topology
     assert resolve_topology() in ("hub", "ring")
@@ -145,24 +242,54 @@ def test_resolve_topology():
         resolve_topology("star")
 
 
+def test_resolve_overlap(monkeypatch):
+    from repro.core.engine.transport import resolve_overlap
+    monkeypatch.delenv("CEPHALO_MP_OVERLAP", raising=False)
+    assert resolve_overlap() is False
+    assert resolve_overlap(True) is True
+    assert resolve_overlap(False) is False
+    for raw, expect in [("1", True), ("true", True), ("ON", True),
+                        ("0", False), ("off", False), ("", False)]:
+        monkeypatch.setenv("CEPHALO_MP_OVERLAP", raw)
+        assert resolve_overlap() is expect, raw
+    monkeypatch.setenv("CEPHALO_MP_OVERLAP", "sideways")
+    with pytest.raises(ValueError, match="CEPHALO_MP_OVERLAP"):
+        resolve_overlap()
+
+
+def test_overlap_requires_ring_topology():
+    """overlap_rounds=True on the hub topology is a configuration error
+    (raised before any worker spawns); the env-resolved default merely
+    warns and stays synchronous."""
+    cfg = get_arch("tiny-llama").reduced()
+    plan = _plan([("A", 1, 1, 0.6), ("B", 1, 1, 0.4)], batch=2)
+    with pytest.raises(ValueError, match="ring"):
+        build_train_step(cfg, plan, substrate="multiproc",
+                         topology="hub", overlap_rounds=True,
+                         adam=AdamConfig(lr=1e-3), seq_len=16)
+
+
 # --- migration + telemetry across the process boundary ------------------------
 # (bitwise step parity across {loopback, hub, ring} × schedules lives in
 #  tests/test_parity_matrix.py — the one harness, not pairwise checks.)
 
 @pytest.mark.slow
-@pytest.mark.parametrize("topology", ["hub", "ring"])
-def test_multiproc_migration_and_wallclock_telemetry(topology):
-    """State exported from a live fleet (either topology) migrates to a
-    fresh loopback engine exactly — pure data movement — and the
-    continued step matches; per-rank wall-clock telemetry came out of
-    the real worker processes."""
+@pytest.mark.parametrize("topology,overlap", [("hub", False),
+                                              ("ring", False),
+                                              ("ring", True)])
+def test_multiproc_migration_and_wallclock_telemetry(topology, overlap):
+    """State exported from a live fleet (either topology, sync or
+    overlapped rounds) migrates to a fresh loopback engine exactly —
+    pure data movement — and the continued step matches; per-rank
+    wall-clock telemetry came out of the real worker processes."""
     cfg = get_arch("tiny-llama").reduced()
     seq = 16
     plan = _plan([("A", 2, 2, 0.6), ("B", 1, 1, 0.4)], batch=5)
     stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=2))
 
     with build_train_step(cfg, plan, substrate="multiproc",
-                          topology=topology, schedule="per_microbatch",
+                          topology=topology, overlap_rounds=overlap,
+                          schedule="per_microbatch",
                           adam=AdamConfig(lr=1e-3), seq_len=seq) as mpe:
         s_mp = mpe.init_state(jax.random.PRNGKey(0))
         s_mp, _ = mpe.step(s_mp, stream.sample(0, 5))
@@ -177,6 +304,19 @@ def test_multiproc_migration_and_wallclock_telemetry(topology):
         for rank, (m, tf, tb) in mpe.last_step_samples.items():
             assert m == plan.ranks[rank].m
             assert tf > 0 and tb > 0
+        if topology == "ring":
+            # ring steps also report per-phase wire time; the overlap
+            # split (exposed vs hidden) only exists on the ring
+            assert sorted(mpe.last_step_comm) == [0, 1]
+            for c in mpe.last_step_comm.values():
+                assert c["allgather_s"] > 0
+                assert c["reduce_scatter_s"] > 0
+            fracs = mpe.hidden_comm_fraction()
+            assert sorted(fracs) == [0, 1]
+            assert all(0.0 <= f <= 1.0 for f in fracs.values())
+        else:
+            assert mpe.last_step_comm == {}
+            assert mpe.hidden_comm_fraction() == {}
 
         # live migration across the process boundary is pure data movement
         lb = build_train_step(cfg, plan, substrate="loopback",
@@ -196,16 +336,22 @@ def test_multiproc_migration_and_wallclock_telemetry(topology):
 # --- fault injection -----------------------------------------------------------
 
 @pytest.mark.slow
-@pytest.mark.parametrize("topology", ["hub", "ring"])
-def test_worker_death_mid_collective_names_rank_and_phase(topology):
+@pytest.mark.parametrize("topology,overlap", [("hub", False),
+                                              ("ring", False),
+                                              ("ring", True)])
+def test_worker_death_mid_collective_names_rank_and_phase(topology,
+                                                          overlap):
     """A worker dying mid-collective must surface a RuntimeError naming
     the dead rank and the collective phase instead of hanging the fleet
-    — the bounded-wait contract, on both topologies."""
+    — the bounded-wait contract, on both topologies, including a death
+    mid-prefetch under the overlapped pipeline (the surviving worker's
+    comm thread hits the dead peer and the failure propagates through
+    the coordinator)."""
     cfg = get_arch("tiny-llama").reduced()
     plan = _plan([("A", 1, 1, 0.6), ("B", 1, 1, 0.4)], batch=2)
     stream = SyntheticStream(DataConfig(cfg.vocab_size, 16, seed=4))
     with build_train_step(cfg, plan, substrate="multiproc",
-                          topology=topology,
+                          topology=topology, overlap_rounds=overlap,
                           adam=AdamConfig(lr=1e-3), seq_len=16) as eng:
         eng.init_state(jax.random.PRNGKey(0))
         eng.inject_death(1)      # dies the instant round 0 reaches it
@@ -213,11 +359,62 @@ def test_worker_death_mid_collective_names_rank_and_phase(topology):
             eng.step({"step": 0}, stream.sample(0, 2))
         msg = str(excinfo.value)
         if topology == "ring":
-            # the surviving peer reported which ring phase broke
+            # a surviving participant reported which ring phase broke
             assert "ring" in msg, msg
         else:
             # the coordinator reported which hub round phase broke
             assert "round[" in msg, msg
+
+
+@pytest.mark.slow
+def test_slow_ring_edge_overlap_no_deadlock_no_reorder():
+    """A deliberately slow ring edge (delay-injected sends on one
+    worker) must not deadlock the overlapped pipeline or reorder its
+    rounds: the delayed fleet produces bitwise-identical losses and
+    state to an undelayed one, only slower — and the comm telemetry
+    shows the ring wire time the step actually paid."""
+    cfg = get_arch("tiny-llama").reduced()
+    seq = 16
+    plan = _plan([("A", 2, 2, 0.6), ("B", 1, 1, 0.4)], batch=5)
+    stream = SyntheticStream(DataConfig(cfg.vocab_size, seq, seed=6))
+
+    def run(delay):
+        with build_train_step(cfg, plan, substrate="multiproc",
+                              topology="ring", overlap_rounds=True,
+                              schedule="per_microbatch",
+                              adam=AdamConfig(lr=1e-3),
+                              seq_len=seq) as eng:
+            state = eng.init_state(jax.random.PRNGKey(0))
+            if delay:
+                eng.inject_ring_delay(1, delay)
+            losses = []
+            for step in range(2):
+                state, loss = eng.step(state, stream.sample(step, 5))
+                losses.append(float(loss))
+            comm = {r: dict(c) for r, c in eng.last_step_comm.items()}
+            return losses, eng.export_state(state), comm
+
+    losses_ref, export_ref, _ = run(0.0)
+    losses_slow, export_slow, comm = run(0.03)
+    assert losses_slow == losses_ref
+    for part in ("p", "m", "v"):
+        assert _tree_max_err(export_ref[part], export_slow[part]) == 0.0
+    # both workers' ring wire time is accounted, and the injected delay
+    # is visible in it (4 collectives/step on n=2, 0.03s per send)
+    assert sorted(comm) == [0, 1]
+    assert all(c["allgather_s"] + c["reduce_scatter_s"] > 0.05
+               for c in comm.values()), comm
+    # restoring the edge works
+    with build_train_step(cfg, plan, substrate="multiproc",
+                          topology="ring", overlap_rounds=True,
+                          adam=AdamConfig(lr=1e-3), seq_len=seq) as eng:
+        eng.init_state(jax.random.PRNGKey(0))
+        eng.inject_ring_delay(0, 0.02)
+        eng.inject_ring_delay(0, 0.0)
+        with pytest.raises(ValueError, match="delay_s"):
+            eng.inject_ring_delay(0, -1.0)
+        with pytest.raises(ValueError, match="out of range"):
+            eng.inject_ring_delay(5, 0.1)
 
 
 def test_dead_worker_on_send_is_named_not_raw_broken_pipe():
@@ -248,6 +445,68 @@ def test_dead_worker_on_send_is_named_not_raw_broken_pipe():
                       phase="reduce_scatterv(G)")
     finally:
         sub.channels[0].close()
+
+
+def test_hidden_comm_fraction_math():
+    """1 − exposed/total per rank, clamped at 0, 0.0 when the wire was
+    idle; accepts an explicit aggregate as well as the last step."""
+    from repro.core.engine.multiproc import ProcessEngine
+
+    eng = ProcessEngine.__new__(ProcessEngine)
+    eng.last_step_comm = {
+        0: {"allgather_s": 0.6, "reduce_scatter_s": 0.4,
+            "exposed_allgather_s": 0.1, "exposed_reduce_scatter_s": 0.1},
+        1: {"allgather_s": 0.5, "reduce_scatter_s": 0.5,
+            "exposed_allgather_s": 0.9, "exposed_reduce_scatter_s": 0.9},
+        2: {"allgather_s": 0.0, "reduce_scatter_s": 0.0,
+            "exposed_allgather_s": 0.0, "exposed_reduce_scatter_s": 0.0},
+    }
+    fracs = eng.hidden_comm_fraction()
+    assert abs(fracs[0] - 0.8) < 1e-9
+    assert fracs[1] == 0.0          # exposed > total clamps, not negative
+    assert fracs[2] == 0.0          # idle wire
+    # explicit aggregate (the benchmark's multi-step sum) overrides
+    agg = {5: {"allgather_s": 1.0, "reduce_scatter_s": 1.0,
+               "exposed_allgather_s": 0.5,
+               "exposed_reduce_scatter_s": 0.5}}
+    assert eng.hidden_comm_fraction(agg) == {5: 0.5}
+
+
+def test_hub_round_sums_union_of_unit_sets():
+    """The hub coordinator's gradient sum must union heterogeneous
+    per-rank unit sets in rank order — same contract as
+    ``ring.combine_fixed_order`` (ISSUE 5 bugfix), so the topologies
+    can't disagree when a rank carries a unit another lacks.  Exercised
+    against a scripted substrate, no fleet."""
+    from repro.core.engine.multiproc import ProcessEngine
+
+    captured = {}
+
+    class _Sub:
+        stats = {"all_gather": 0, "reduce_scatter": 0}
+
+        def gather_flat(self, key):
+            return {}
+
+        def request_all(self, tag, metas=None, arrays=None, ranks=None,
+                        phase=""):
+            return [
+                ({"loss": 1.0, "n_mb": 1, "t_wall": 0.0},
+                 {"G|a": np.asarray([1.0, 2.0], np.float32)}),
+                ({"loss": 2.0, "n_mb": 1, "t_wall": 0.0},
+                 {"G|a": np.asarray([1.0, 1.0], np.float32),
+                  "G|b": np.asarray([5.0], np.float32)}),
+            ]
+
+        def scatter_grad_flats(self, sums):
+            captured.update(sums)
+
+    eng = ProcessEngine.__new__(ProcessEngine)
+    eng.substrate = _Sub()
+    out = eng._hub_collective_round(0, 1, [0, 1])
+    assert [rank for rank, _ in out] == [0, 1]
+    np.testing.assert_array_equal(captured["a"], [2.0, 3.0])
+    np.testing.assert_array_equal(captured["b"], [5.0])   # not dropped
 
 
 # --- wall-clock elastic cycle -------------------------------------------------

@@ -5,12 +5,14 @@ that used to live in ``test_engine.py`` / ``test_multiproc.py``: the
 same seeded step runs across every substrate × every registered GA
 schedule, and the results are compared against the loopback reference.
 
-* {loopback, multiproc-hub, multiproc-ring} are **bitwise-identical**:
-  same rank-order float accumulation by construction (the hub sums at
-  the coordinator, the ring accumulate-then-combines at each
-  destination — same order, same values), so losses, params, and Adam
-  moments after N steps match exactly, and the collective event counts
-  agree with the schedule's round structure.
+* {loopback, multiproc-hub, multiproc-ring, multiproc-ring-overlapped}
+  are **bitwise-identical**: same rank-order float accumulation by
+  construction (the hub sums at the coordinator, the ring
+  accumulate-then-combines at each destination — same order, same
+  values; the overlapped pipeline only moves payloads *earlier*, never
+  reorders a reduction), so losses, params, and Adam moments after N
+  steps match exactly, and the collective event counts agree with the
+  schedule's round structure.
 * shard_map joins in the integration variant (fake host devices, run
   in a subprocess) with the documented 2e-4 post-Adam tolerance — its
   in-graph reductions re-associate floats, which is exactly why it
@@ -76,11 +78,22 @@ def _tree_max_err(a, b):
         a, b)))
 
 
+#: multiproc variants in the bitwise club: hub, synchronous ring, and
+#: the overlapped ring pipeline (ISSUE 5 — overlap changes *when*
+#: payloads move, never the reduction order).
+MP_VARIANTS = (
+    ("hub", {"topology": "hub"}),
+    ("ring", {"topology": "ring"}),
+    ("ring+overlap", {"topology": "ring", "overlap_rounds": True}),
+)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("schedule", SCHEDULES)
 def test_parity_matrix_host_substrates(schedule):
-    """loopback vs multiproc-hub vs multiproc-ring: bitwise, per
-    schedule — losses, params, Adam moments, and collective counts."""
+    """loopback vs multiproc-hub vs multiproc-ring (sync and overlapped):
+    bitwise, per schedule — losses, params, Adam moments, and collective
+    counts."""
     cfg = get_arch("tiny-llama").reduced()
     plan = _plan()
     ref_losses, ref_export, ref_stats = _run_cell(
@@ -89,14 +102,14 @@ def test_parity_matrix_host_substrates(schedule):
     assert ref_export["step"] == 2
     assert max(float(jnp.abs(x).max())
                for x in jax.tree.leaves(ref_export["m"])) > 0
-    for topology in ("hub", "ring"):
+    for label, kw in MP_VARIANTS:
         losses, exported, stats = _run_cell(
-            cfg, plan, schedule, "multiproc", topology=topology)
-        assert losses == ref_losses, (topology, losses, ref_losses)
-        assert stats == ref_stats, (topology, stats, ref_stats)
+            cfg, plan, schedule, "multiproc", **kw)
+        assert losses == ref_losses, (label, losses, ref_losses)
+        assert stats == ref_stats, (label, stats, ref_stats)
         for part in ("p", "m", "v"):
             err = _tree_max_err(ref_export[part], exported[part])
-            assert err == 0.0, (topology, part, err)
+            assert err == 0.0, (label, part, err)
 
 
 @pytest.mark.integration
@@ -127,26 +140,28 @@ def err(a, b):
                                    jnp.asarray(y, jnp.float32)).max()),
         a, b)))
 
-cells = [("loopback", {}), ("multiproc", {"topology": "hub"}),
-         ("multiproc", {"topology": "ring"}), ("shard_map", {})]
+cells = [("loopback", "lb", {}), ("multiproc", "hub", {"topology": "hub"}),
+         ("multiproc", "ring", {"topology": "ring"}),
+         ("multiproc", "ring+ov",
+          {"topology": "ring", "overlap_rounds": True}),
+         ("shard_map", "sm", {})]
 for sched in ("layered", "per_microbatch", "interleaved"):
     outs = {}
-    for sub, kw in cells:
+    for sub, label, kw in cells:
         eng = build_train_step(cfg, plan, schedule=sched, substrate=sub,
                                adam=AdamConfig(lr=1e-3), seq_len=seq, **kw)
         try:
             state = eng.init_state(jax.random.PRNGKey(0))
             state, loss = eng.step(state, big)
-            outs[(sub,) + tuple(kw.values())] = \\
-                (float(loss), eng.gather_params(state))
+            outs[label] = (float(loss), eng.gather_params(state))
         finally:
             eng.close()
-    l_ref, p_ref = outs[("loopback",)]
-    for key in (("multiproc", "hub"), ("multiproc", "ring")):
+    l_ref, p_ref = outs["lb"]
+    for key in ("hub", "ring", "ring+ov"):
         l, p = outs[key]
         assert l == l_ref, (sched, key, l, l_ref)
         assert err(p_ref, p) == 0.0, (sched, key)
-    l_s, p_s = outs[("shard_map",)]
+    l_s, p_s = outs["sm"]
     assert abs(l_s - l_ref) < 1e-4, (sched, l_s, l_ref)
     e = err(p_ref, p_s)
     assert e < 2e-4, (sched, e)
