@@ -209,8 +209,12 @@ def artifact(rows_out: List[Dict], nprocs: int, schedule: Optional[str],
                 r.get("coordinator_kib_per_round"),
             "max_abs_err_vs_loopback": r.get("max_abs_err_vs_loopback"),
         }
+    from repro.core.engine.verify import resolve_sanitize
     return {"benchmark": "multiproc_throughput",
             "nprocs": nprocs, "schedule": schedule, "steps": steps,
+            # archived perf numbers must come from an unsanitized data
+            # plane; CI gates on this being false
+            "comm_sanitize": resolve_sanitize(),
             "variants": variants}
 
 

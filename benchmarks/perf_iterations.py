@@ -102,7 +102,7 @@ def run_variant(vid: str) -> Dict:
     mesh = make_production_mesh(multi_pod=False)
     rec = {"variant": vid, "arch": v["arch"], "shape": v["shape"],
            "desc": v["desc"], "opts": v["opts"]}
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         m = max(shape.global_batch // 256, 1)
         prog = CephaloProgram(cfg, mesh, ell=1, m=m, seq=shape.seq_len,
@@ -125,7 +125,7 @@ def run_variant(vid: str) -> Dict:
         lowered = fn.lower(*args)
     mlir = lowered.as_text()
     compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 2)
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
     rec["memory_analysis"] = _mem_dict(compiled)
     rec["cost_analysis"] = _cost_dict(compiled)
     # StableHLO parse: the CPU test backend legalizes bf16 collectives

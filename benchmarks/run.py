@@ -107,7 +107,7 @@ def main() -> None:
         try:
             rows = fn()
             derived = derive(rows)
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001 - section failure lands in the CSV
             rows = [{"error": f"{type(e).__name__}: {e}"}]
             derived = "ERROR"
         us = (time.perf_counter() - t0) * 1e6
@@ -128,7 +128,7 @@ def _hetero_gain(rows) -> str:
         base = next(r for r in rows if r["cluster"] == "16xA10G")
         full = next(r for r in rows if r["cluster"] == "all-64")
         return f"{full['train_tflops'] / base['train_tflops']:.2f}x"
-    except Exception:  # noqa: BLE001
+    except Exception:  # noqa: BLE001 - missing row renders as "?"
         return "?"
 
 

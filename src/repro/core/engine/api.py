@@ -219,7 +219,11 @@ def build_train_step(cfg: ArchConfig, plan: Plan, *,
     only: pipeline the collective rounds so round *k+1*'s AllGatherv
     prefetches under round *k*'s compute — same bits, less exposed
     wire time; default ``$CEPHALO_MP_OVERLAP``), ``ring_timeout=``,
-    ``reply_timeout=``, ``jax_coordinator=``.  With ``elastic=`` the
+    ``reply_timeout=``, ``jax_coordinator=``, and ``sanitize=`` (arm the
+    runtime comm sanitizer on every ring worker — live conformance
+    against the statically verified protocol model of
+    :mod:`repro.core.engine.verify`; default
+    ``$CEPHALO_COMM_SANITIZE``).  With ``elastic=`` the
     knobs are captured and re-applied on every replan rebuild, so e.g.
     a ring fleet replans into a ring fleet and an overlapped fleet
     stays overlapped.

@@ -88,6 +88,9 @@ from repro.core.engine.transport import (Channel, resolve_overlap,
                                          resolve_topology,
                                          resolve_transport)
 from repro.core.engine.units import UnitPlanner, normalized_ratios
+from repro.core.engine.verify.sanitizer import (CommSanitizer,
+                                                resolve_sanitize,
+                                                waiting_guard)
 from repro.core.partition import Plan
 from repro.optim.adam import AdamConfig, adam_update
 
@@ -152,6 +155,10 @@ class WorkerSpec:
     jax_coordinator: Optional[str] = None
     topology: str = "hub"
     ring_timeout: float = RING_TIMEOUT
+    #: arm the runtime comm sanitizer (verify.sanitizer.CommSanitizer):
+    #: every ring link event is checked live against the statically
+    #: verified protocol model.
+    sanitize: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -209,6 +216,13 @@ class _RingLinks:
         #: mismatch raises an out-of-protocol error immediately instead
         #: of parking until the timeout.
         self.out_of_order = False
+        #: live protocol conformance checker (CEPHALO_COMM_SANITIZE=1) —
+        #: ``None`` keeps the hot path at one ``is None`` branch per hook.
+        self.sanitizer: Optional[CommSanitizer] = None
+        #: seeded-bug injection for the sanitizer tests (the ``fault``
+        #: command): "reuse_tag" stamps every outbound payload with
+        #: round 0, "skip_ack" elides the arena-ack ops.
+        self.mutate: Optional[str] = None
 
     def run(self, gen, phase: str, tags: Optional[dict] = None):
         """Drive one ring collective generator over the real channels.
@@ -217,26 +231,33 @@ class _RingLinks:
         message of this collective and matched on receive.
         """
         tags = tags or {}
-        return ring.drive(
+        if self.sanitizer is not None:
+            self.sanitizer.begin_collective(phase, tags)
+        result = ring.drive(
             gen,
             lambda step, payload: self._exchange(phase, step, payload,
                                                  tags))
+        if self.sanitizer is not None:
+            self.sanitizer.end_collective()
+        return result
 
     def _exchange(self, phase: str, step: int,
                   payload: Dict[str, np.ndarray],
                   tags: dict) -> Dict[str, np.ndarray]:
         meta = {"phase": phase, "step": step, "src": self.rank, **tags}
         match = {"phase": phase, "step": step, **tags}
+        send_meta = meta if self.mutate != "reuse_tag" else \
+            {**meta, "round": 0}
         try:
             if self.rank % 2 == 0:
-                self._send(meta, payload)
+                self._send(send_meta, payload)
                 received = self._recv(phase, step, match)
-                self.prev_ch.send("ring_ack", meta)
+                self._send_ack(meta)
                 self._recv_ack(phase, step, match)
             else:
                 received = self._recv(phase, step, match)
-                self.prev_ch.send("ring_ack", meta)
-                self._send(meta, payload)
+                self._send_ack(meta)
+                self._send(send_meta, payload)
                 self._recv_ack(phase, step, match)
         except (EOFError, OSError) as e:
             raise RuntimeError(
@@ -246,51 +267,76 @@ class _RingLinks:
         return received
 
     def _send(self, meta: dict, payload: Dict[str, np.ndarray]) -> None:
+        if self.sanitizer is not None:
+            # checked BEFORE the bytes move: a protocol bug raises at
+            # the offending rank instead of wedging its peer
+            self.sanitizer.observe("send_payload", meta)
         if self.delay > 0.0:
             time.sleep(self.delay)
         self.next_ch.send("ring", meta, payload)
 
+    def _send_ack(self, meta: dict) -> None:
+        if self.mutate == "skip_ack":
+            return
+        if self.sanitizer is not None:
+            self.sanitizer.observe("send_ack", meta)
+        self.prev_ch.send("ring_ack", meta)
+
     def _recv(self, phase: str, step: int,
               match: dict) -> Dict[str, np.ndarray]:
-        _, _, arrays = self._bounded_recv(self.prev_ch, "ring", match,
-                                          phase, step, self.prev_rank)
+        _, g_meta, arrays = self._bounded_recv(self.prev_ch, "ring", match,
+                                               phase, step, self.prev_rank)
+        if self.sanitizer is not None:
+            self.sanitizer.observe("recv_payload", g_meta)
         return arrays
 
     def _recv_ack(self, phase: str, step: int, match: dict) -> None:
-        self._bounded_recv(self.next_ch, "ring_ack", match, phase, step,
-                           self.next_rank)
+        if self.mutate == "skip_ack":
+            return
+        _, g_meta, _ = self._bounded_recv(self.next_ch, "ring_ack", match,
+                                          phase, step, self.next_rank)
+        if self.sanitizer is not None:
+            self.sanitizer.observe("recv_ack", g_meta)
 
     def _bounded_recv(self, ch: Channel, tag: str, match: dict,
                       phase: str, step: int, peer: int):
         try:
-            if not self.out_of_order:
-                # synchronous rounds: nothing may legally arrive early,
-                # so verify in place and fail fast on any mismatch
-                got = ch.recv(timeout=self.timeout)
-                g_tag, g_meta, _ = got
-                if g_tag != tag or any(g_meta.get(k) != v
-                                       for k, v in match.items()):
-                    raise RuntimeError(
-                        f"ring {phase} step {step}: rank {self.rank} got "
-                        f"out-of-protocol message {g_tag!r} (meta "
-                        f"{g_meta}) from rank {peer}, expected {tag!r} "
-                        f"{match}")
-                return got
-            # overlapped pipeline: prefetch traffic parks via the
-            # tag-matched receive.  The step-end barrier fully drains
-            # each engine step's ring traffic, so a message tagged with
-            # an older gstep can never be claimed — drop-with-warning
-            # instead of parking it until the timeout.
-            gstep = match.get("gstep")
-            stale = None if gstep is None else \
-                (lambda m: m.get("gstep", gstep) < gstep)
-            return ch.recv_match(tag, match, timeout=self.timeout,
-                                 stale=stale)
+            with waiting_guard(self.sanitizer,
+                               f"{tag!r} from rank {peer} "
+                               f"({phase} step {step})"):
+                return self._recv_checked(ch, tag, match, phase, step,
+                                          peer)
         except TimeoutError as e:
             raise RuntimeError(
                 f"ring {phase} step {step}: rank {self.rank} timed out "
                 f"after {self.timeout:.0f}s waiting for {tag!r} from "
                 f"rank {peer} ({e})") from e
+
+    def _recv_checked(self, ch: Channel, tag: str, match: dict,
+                      phase: str, step: int, peer: int):
+        if not self.out_of_order:
+            # synchronous rounds: nothing may legally arrive early,
+            # so verify in place and fail fast on any mismatch
+            got = ch.recv(timeout=self.timeout)
+            g_tag, g_meta, _ = got
+            if g_tag != tag or any(g_meta.get(k) != v
+                                   for k, v in match.items()):
+                raise RuntimeError(
+                    f"ring {phase} step {step}: rank {self.rank} got "
+                    f"out-of-protocol message {g_tag!r} (meta "
+                    f"{g_meta}) from rank {peer}, expected {tag!r} "
+                    f"{match}")
+            return got
+        # overlapped pipeline: prefetch traffic parks via the
+        # tag-matched receive.  The step-end barrier fully drains
+        # each engine step's ring traffic, so a message tagged with
+        # an older gstep can never be claimed — drop-with-warning
+        # instead of parking it until the timeout.
+        gstep = match.get("gstep")
+        stale = None if gstep is None else \
+            (lambda m: m.get("gstep", gstep) < gstep)
+        return ch.recv_match(tag, match, timeout=self.timeout,
+                             stale=stale)
 
     def close(self) -> None:
         self.prev_ch.close()
@@ -471,6 +517,12 @@ class _Worker:
         tags = {"round": int(meta.get("round", 0)),
                 "gstep": int(meta.get("gstep", 0))}
         comm = _empty_comm()
+        san = self.ring_links.sanitizer if self.ring_links is not None \
+            else None
+        if san is not None:
+            # a synchronous round's fixed op order: AG then RS
+            san.begin_step([("allgather", tags["round"]),
+                            ("reduce_scatter", tags["round"])])
         own = self._own_param_chunks()
         got = self._ring_allgather(own, lo, hi, tags, comm)
         out_meta, dest_chunks = self._round_compute(
@@ -480,6 +532,9 @@ class _Worker:
         round_sum = ring.combine_fixed_order(collected)
         if round_sum is not None:
             self.accum_grads(round_sum)
+        if san is not None:
+            san.end_step((self.ring_links.prev_ch,
+                          self.ring_links.next_ch))
         # synchronous ring: the main thread drives the wire, so every
         # communication second is exposed to the step's critical path
         comm["exposed_allgather_s"] = comm["allgather_s"]
@@ -547,6 +602,14 @@ class _Worker:
         comm_thread = threading.Thread(
             target=comm_main, daemon=True,
             name=f"cephalo-rank{self.spec.rank}-ring-comm")
+        san = self.ring_links.sanitizer if self.ring_links is not None \
+            else None
+        if san is not None:
+            # arm the step's verified global op order before the comm
+            # thread starts consuming it (overlap_plan is the single
+            # source of truth for both)
+            san.begin_step([(op, int(rounds[k]["round"]))
+                            for op, k in ring.overlap_plan(len(rounds))])
         if self.ring_links is not None:
             # prefetch traffic is legitimate for the duration of this
             # step: let early later-round messages park instead of
@@ -570,6 +633,11 @@ class _Worker:
             comm["exposed_reduce_scatter_s"] += time.perf_counter() - t0
             if failure:
                 raise failure[0]
+            if san is not None:
+                # the comm thread is done: the plan must be exhausted
+                # and no prefetch may be left parked past the barrier
+                san.end_step((self.ring_links.prev_ch,
+                              self.ring_links.next_ch))
         except BaseException:
             outbound_q.put(_ABORT)   # unblock a comm thread awaiting grads
             comm_thread.join(timeout=self.spec.ring_timeout + 30.0)
@@ -671,6 +739,8 @@ def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
                            Channel(ring_prev, transport=spec.transport),
                            Channel(ring_next, transport=spec.transport),
                            timeout=spec.ring_timeout)
+        if spec.sanitize:
+            links.sanitizer = CommSanitizer(spec.rank, spec.n_ranks)
     worker = _Worker(spec, ring_links=links)
     while True:
         try:
@@ -720,6 +790,15 @@ def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
                             f"rank {spec.rank}: slow_ring fault needs "
                             "ring links (topology='ring', n > 1)")
                     worker.ring_links.delay = float(meta.get("delay", 0.0))
+                elif mode in ("mutate_reuse_tag", "mutate_skip_ack"):
+                    # seeded protocol bugs for the sanitizer tests:
+                    # reuse_tag stamps outbound payloads with round 0,
+                    # skip_ack elides the arena-ack ops on this rank
+                    if worker.ring_links is None:
+                        raise ValueError(
+                            f"rank {spec.rank}: {mode} fault needs "
+                            "ring links (topology='ring', n > 1)")
+                    worker.ring_links.mutate = mode[len("mutate_"):]
                 else:
                     raise ValueError(f"unknown fault mode {mode!r}")
                 channel.send("ok")
@@ -743,6 +822,8 @@ def _worker_main(spec: WorkerSpec, conn, ring_prev=None,
         except Exception:   # noqa: BLE001 - forwarded to coordinator
             channel.send("error", {"traceback": traceback.format_exc()})
     if links is not None:
+        if links.sanitizer is not None:
+            links.sanitizer.close()
         links.close()
     channel.close()
 
@@ -965,7 +1046,8 @@ class ProcessEngine(TrainEngine):
                  start_method: str = "spawn",
                  reply_timeout: float = REPLY_TIMEOUT,
                  ring_timeout: float = RING_TIMEOUT,
-                 jax_coordinator: Optional[str] = None):
+                 jax_coordinator: Optional[str] = None,
+                 sanitize: Optional[bool] = None):
         if not plan.feasible:
             raise ValueError(plan.infeasible_reason)
         self.cfg, self.plan, self.schedule = cfg, plan, schedule
@@ -974,6 +1056,7 @@ class ProcessEngine(TrainEngine):
         transport = resolve_transport(transport)
         self.topology = resolve_topology(topology)
         self.overlap = resolve_overlap(overlap_rounds)
+        self.sanitize = resolve_sanitize(sanitize)
         if self.overlap and self.topology != "ring":
             if overlap_rounds:
                 raise ValueError(
@@ -996,7 +1079,8 @@ class ProcessEngine(TrainEngine):
                             transport=transport, n_ranks=plan.n,
                             jax_coordinator=jax_coordinator,
                             topology=self.topology,
-                            ring_timeout=ring_timeout)
+                            ring_timeout=ring_timeout,
+                            sanitize=self.sanitize)
                  for r in plan.ranks]
         self.substrate = MultiProcessSubstrate(
             self.planner, specs, start_method=start_method,
@@ -1306,6 +1390,24 @@ class ProcessEngine(TrainEngine):
             raise ValueError(f"delay_s must be >= 0, got {delay_s}")
         self.substrate.request(rank, "fault",
                                {"mode": "slow_ring", "delay": delay_s})
+
+    def inject_protocol_mutation(self, rank: int, mode: str) -> None:
+        """Fault injection: seed a live protocol bug at ``rank`` for the
+        comm-sanitizer tests.  ``"reuse_tag"`` stamps every outbound
+        ring payload with round 0 (the tag-collision bug the static
+        checker proves absent); ``"skip_ack"`` elides the rank's
+        arena-ack ops (the early-reuse bug).  With the sanitizer armed
+        (``sanitize=True`` / ``CEPHALO_COMM_SANITIZE=1``) either raises
+        a ProtocolViolation at the offending rank before a peer can
+        wedge; without it the bug surfaces only as a peer-side
+        out-of-protocol error or a bounded timeout."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} out of range for n={self.n}")
+        if mode not in ("reuse_tag", "skip_ack"):
+            raise ValueError(
+                f"unknown protocol mutation {mode!r}; expected "
+                "'reuse_tag' or 'skip_ack'")
+        self.substrate.request(rank, "fault", {"mode": f"mutate_{mode}"})
 
     # --- MPMD extras (launcher surface) --------------------------------
     def memory_report(self, state) -> str:

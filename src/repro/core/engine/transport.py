@@ -90,7 +90,7 @@ def _try_import_shm():
     try:
         from multiprocessing import shared_memory
         return shared_memory
-    except Exception:   # pragma: no cover - py<3.8 / exotic platforms
+    except Exception:   # noqa: BLE001 - no shm plane; pragma: no cover
         return None
 
 
@@ -224,6 +224,11 @@ class Channel:
         #: show hub-vs-ring bytes through the coordinator.
         self.array_bytes_out: Dict[str, int] = {}
         self.array_bytes_in: Dict[str, int] = {}
+        #: array payload bytes received but never claimed: parked
+        #: messages discarded at close plus stale messages dropped by
+        #: :meth:`recv_match` — nonzero means a peer sent traffic this
+        #: endpoint paid for on the wire and then threw away.
+        self.array_bytes_dropped: Dict[str, int] = {}
 
     # --- send ---------------------------------------------------------------
     def send(self, tag: str, meta: Optional[dict] = None,
@@ -303,6 +308,7 @@ class Channel:
             if t == tag and all(m.get(k) == v for k, v in match.items()):
                 return got
             if stale is not None and stale(m):
+                self._count_dropped(got)
                 warnings.warn(
                     f"dropping stale {t!r} message (meta {m}) that can "
                     f"no longer be claimed while waiting for {tag!r} "
@@ -351,13 +357,36 @@ class Channel:
             sum(int(a.nbytes) for a in arrays.values())
         return tag, meta, arrays
 
+    def _count_dropped(self, msg: Tuple[str, dict, Dict[str, np.ndarray]]
+                       ) -> None:
+        tag, _, arrays = msg
+        self.array_bytes_dropped[tag] = \
+            self.array_bytes_dropped.get(tag, 0) + \
+            sum(int(a.nbytes) for a in arrays.values())
+
     def close(self) -> None:
         """Release arenas and the pipe connection.  Idempotent; a
         connection that is already gone (peer died, double close) is
-        expected and stays quiet, anything else is reported."""
+        expected and stays quiet, anything else is reported.
+
+        Parked messages (received, never claimed) are not silently
+        forgotten: closing over them warns with the unclaimed tags/metas
+        and counts their payload bytes in ``array_bytes_dropped`` — on a
+        healthy channel the protocol drains every message it paid for,
+        so anything still parked here points at a protocol bug (e.g. a
+        prefetch the overlap pipeline never consumed)."""
         for arena in (self._send_arena, self._recv_arena):
             if arena is not None:
                 arena.close()
+        if self._pending:
+            for msg in self._pending:
+                self._count_dropped(msg)
+            warnings.warn(
+                f"channel closed with {len(self._pending)} parked "
+                "message(s) never claimed (unclaimed: "
+                f"{[(t, m) for t, m, _ in self._pending[:4]]}; "
+                f"{sum(self.array_bytes_dropped.values())} total bytes "
+                "dropped)", RuntimeWarning, stacklevel=2)
         self._pending = []
         try:
             self.conn.close()

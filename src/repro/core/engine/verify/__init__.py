@@ -1,0 +1,36 @@
+"""Comm-protocol verification: static analysis + runtime sanitizer.
+
+The growing (topology × schedule × overlap × nprocs × layout) protocol
+surface of the paper's Sec. 2 / App. C data plane is proven safe here
+*before any process spawns*: :mod:`verify.model` enumerates every
+rank's event sequence symbolically from the pure ring generators,
+:mod:`verify.simulate` executes the programs abstractly and checks
+deadlock freedom, send/recv matching, buffering caps, and ack-gated
+arena reuse, :mod:`verify.lint` proves every gradient reduction routes
+through ``combine_fixed_order``, :mod:`verify.mutations` keeps the
+checker honest with seeded bugs, and :mod:`verify.sanitizer` re-checks
+the same model against live traffic (``CEPHALO_COMM_SANITIZE=1``).
+See ``docs/verification.md``.
+"""
+
+from repro.core.engine.verify.cells import (GridReport, default_layouts,
+                                            grid_cells, verify_grid)
+from repro.core.engine.verify.lint import Finding, lint_determinism
+from repro.core.engine.verify.model import (BASELINE, Cell, Ev, RankShape,
+                                            Variant, cell_programs,
+                                            exchange_steps, rounds_for)
+from repro.core.engine.verify.mutations import (MutationReport,
+                                                run_mutation_harness)
+from repro.core.engine.verify.sanitizer import (CommSanitizer,
+                                                ProtocolViolation,
+                                                resolve_sanitize)
+from repro.core.engine.verify.simulate import (CellReport, Report,
+                                               Violation, verify_cell)
+
+__all__ = [
+    "BASELINE", "Cell", "CellReport", "CommSanitizer", "Ev", "Finding",
+    "GridReport", "MutationReport", "ProtocolViolation", "RankShape",
+    "Report", "Variant", "Violation", "cell_programs", "default_layouts",
+    "exchange_steps", "grid_cells", "lint_determinism", "resolve_sanitize",
+    "rounds_for", "run_mutation_harness", "verify_cell", "verify_grid",
+]

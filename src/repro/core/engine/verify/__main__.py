@@ -1,0 +1,7 @@
+"""``python -m repro.core.engine.verify`` — see :mod:`verify.cli`."""
+
+import sys
+
+from repro.core.engine.verify.cli import main
+
+sys.exit(main())

@@ -44,7 +44,7 @@ def _mesh_name(multi_pod: bool) -> str:
 def _mem_dict(compiled) -> Dict[str, float]:
     try:
         m = compiled.memory_analysis()
-    except Exception:
+    except Exception:   # noqa: BLE001 - backend-optional API, {} recorded
         return {}
     if m is None:
         return {}
@@ -61,7 +61,7 @@ def _mem_dict(compiled) -> Dict[str, float]:
 def _cost_dict(compiled) -> Dict[str, float]:
     try:
         c = compiled.cost_analysis()
-    except Exception:
+    except Exception:   # noqa: BLE001 - backend-optional API, {} recorded
         return {}
     # older jax returns a per-device list of dicts, newer a single dict
     if isinstance(c, (list, tuple)):
@@ -97,7 +97,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
                   f"{reason}")
         return record
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         if shape.kind == "train":
             # Cephalo FSDP step: every chip is a ZeRO-3 DP worker.  With
@@ -128,16 +128,16 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
         else:
             fn, args = serving.build_decode(cfg, mesh, shape)
             lowered = fn.lower(*args)
-        record["lower_s"] = round(time.time() - t0, 2)
+        record["lower_s"] = round(time.perf_counter() - t0, 2)
 
-        t1 = time.time()
+        t1 = time.perf_counter()
         compiled = lowered.compile()
-        record["compile_s"] = round(time.time() - t1, 2)
+        record["compile_s"] = round(time.perf_counter() - t1, 2)
         record["memory_analysis"] = _mem_dict(compiled)
         record["cost_analysis"] = _cost_dict(compiled)
         try:
             hlo = compiled.as_text()
-        except Exception:
+        except Exception:   # noqa: BLE001 - fall back to pre-compile HLO
             hlo = lowered.as_text()
         coll = R.parse_collectives(hlo)
         record["collectives"] = {

@@ -43,20 +43,20 @@ def main() -> None:
     prefill = jax.jit(lambda p, t: M.prefill(cfg, p, t, max_len=max_len))
     decode = jax.jit(lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, caches = prefill(params, jnp.asarray(prompts))
     next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
     print(f"prefill: {args.batch}x{args.prompt_len} in "
-          f"{time.time() - t0:.2f}s")
+          f"{time.perf_counter() - t0:.2f}s")
 
     out_tokens = [next_tok]
-    t1 = time.time()
+    t1 = time.perf_counter()
     for i in range(args.gen - 1):
         pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
         logits, caches = decode(params, caches, next_tok, pos)
         next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         out_tokens.append(next_tok)
-    dt = time.time() - t1
+    dt = time.perf_counter() - t1
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
     print(f"decode: {args.gen - 1} steps x {args.batch} seqs in {dt:.2f}s "
           f"({(args.gen - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")

@@ -199,12 +199,19 @@ def test_channel_recv_match_out_of_order(transport):
         tag, meta, _ = rx.recv_match("ring_ack", {"round": 0}, timeout=5.0)
         assert tag == "ring_ack"
         # a match that never arrives times out and reports the parked mess
-        tx.send("ring", {"round": 9, "step": 9}, {})
+        stranded = {"z": np.ones((2, 3), np.float32)}
+        tx.send("ring", {"round": 9, "step": 9}, stranded)
         with pytest.raises(TimeoutError, match="parked"):
             rx.recv_match("ring", {"round": 2, "step": 2}, timeout=0.2)
+        # closing over a parked message is loud, not silent: the warning
+        # names the unclaimed tag/meta and the payload bytes count as
+        # dropped (the peer paid wire time for traffic nobody claimed)
+        with pytest.warns(RuntimeWarning, match="never claimed"):
+            rx.close()
+        assert rx.array_bytes_dropped == {"ring": stranded["z"].nbytes}
     finally:
         tx.close()
-        rx.close()
+        rx.close()   # idempotent: pending already drained/discarded
 
 
 def test_channel_recv_match_fail_fast_guards():
@@ -215,7 +222,8 @@ def test_channel_recv_match_fail_fast_guards():
     a, b = mp.Pipe(duplex=True)
     tx, rx = Channel(a, transport="pipe"), Channel(b, transport="pipe")
     try:
-        tx.send("ring", {"gstep": 1, "round": 0}, {})   # stale (old step)
+        old = {"w": np.ones((4,), np.float32)}
+        tx.send("ring", {"gstep": 1, "round": 0}, old)   # stale (old step)
         tx.send("ring", {"gstep": 2, "round": 0},
                 {"x": np.ones(3, np.float32)})
         with pytest.warns(RuntimeWarning, match="stale"):
@@ -224,11 +232,101 @@ def test_channel_recv_match_fail_fast_guards():
                 stale=lambda m: m.get("gstep", 2) < 2)
         assert meta["gstep"] == 2 and "x" in arrays
         assert rx._pending == []            # the stale one was dropped
+        # ... and its payload bytes are accounted as dropped
+        assert rx.array_bytes_dropped == {"ring": old["w"].nbytes}
         # parked-buffer cap: a flood of never-matching traffic raises
         for i in range(Channel.MAX_PENDING + 1):
             tx.send("ring", {"gstep": 99, "round": i}, {})
         with pytest.raises(RuntimeError, match="protocol error"):
             rx.recv_match("ring", {"gstep": 3, "round": 0}, timeout=30.0)
+        with pytest.warns(RuntimeWarning, match="never claimed"):
+            rx.close()
+    finally:
+        tx.close()
+        rx.close()
+
+
+@pytest.mark.parametrize("transport", ["pipe", "shm"])
+def test_channel_recv_match_duplicate_tags_in_flight(transport):
+    """Two in-flight messages with the *same* (tag, meta) match key
+    deliver in arrival order, once each — never the same message twice,
+    never zero times.  (The static verifier proves the ring protocol
+    never produces duplicate keys; this pins the channel's behavior if
+    one ever appeared.)  Payload *integrity* under back-to-back sends is
+    plane-dependent: the pipe plane frames each payload, while the shm
+    plane reuses the arena — without the ring protocol's ack gating the
+    second write may overwrite the first before the reader copies it
+    out, which is exactly the arena property the verifier checks."""
+    a, b = mp.Pipe(duplex=True)
+    tx, rx = Channel(a, transport=transport), Channel(b, transport=transport)
+    try:
+        first = {"x": np.asarray([1.0, 2.0], np.float32)}
+        second = {"x": np.asarray([3.0, 4.0], np.float32)}
+        tx.send("ring", {"round": 0, "step": 0}, first)
+        tx.send("ring", {"round": 0, "step": 0}, second)   # duplicate key
+        _, m1, got1 = rx.recv_match("ring", {"round": 0, "step": 0},
+                                    timeout=5.0)
+        _, m2, got2 = rx.recv_match("ring", {"round": 0, "step": 0},
+                                    timeout=5.0)
+        assert m1 == m2 == {"round": 0, "step": 0}
+        np.testing.assert_array_equal(got2["x"], second["x"])
+        if transport == "pipe":
+            np.testing.assert_array_equal(got1["x"], first["x"])
+        else:
+            # the unacked second send overwrote the arena: the first
+            # payload is gone — the hazard ack gating exists to prevent
+            np.testing.assert_array_equal(got1["x"], second["x"])
+        assert rx._pending == []
+    finally:
+        tx.close()
+        rx.close()
+
+
+@pytest.mark.parametrize("transport", ["pipe", "shm"])
+def test_channel_recv_match_interleaved_park_claim(transport):
+    """The overlap tag scheme interleaved: an AG round k+1 prefetch
+    payload arrives early, is parked by a claim for a *different* match
+    key, and is then claimed by the later matched receive — with its
+    meta and payload surviving parking byte-exactly (phase, step, round,
+    gstep).  The wire order respects the ring's ack discipline (at most
+    one unacked bulk payload per direction), so parking's dequeue-time
+    copy-out keeps the shm arena safe to reuse."""
+    a, b = mp.Pipe(duplex=True)
+    tx, rx = Channel(a, transport=transport), Channel(b, transport=transport)
+    try:
+        ag = "allgather(p)[2,4)"
+        rs = "reduce_scatter(G)[0,2)"
+        # AG k+1 prefetch payload and its trailing ack arrive early
+        tx.send("ring", {"phase": ag, "step": 0, "round": 1, "gstep": 3,
+                         "src": 1}, {"p": np.ones(5, np.float32)})
+        tx.send("ring_ack", {"phase": ag, "step": 0, "round": 1,
+                             "gstep": 3, "src": 1})
+        # claiming the ack parks the AG payload (copied out of the
+        # arena at dequeue — the sender may now legally reuse it)
+        _, meta, _ = rx.recv_match(
+            "ring_ack", {"phase": ag, "step": 0, "round": 1, "gstep": 3},
+            timeout=5.0)
+        assert meta["round"] == 1
+        assert [t for t, _, _ in rx._pending] == ["ring"]
+        # RS round k traffic flows and claims while AG k+1 stays parked
+        tx.send("ring", {"phase": rs, "step": 0, "round": 0, "gstep": 3,
+                         "src": 1}, {"g": np.full(4, 2.0, np.float32)})
+        _, meta, arrays = rx.recv_match(
+            "ring", {"phase": rs, "step": 0, "round": 0, "gstep": 3},
+            timeout=5.0)
+        assert meta["round"] == 0
+        np.testing.assert_array_equal(arrays["g"],
+                                      np.full(4, 2.0, np.float32))
+        assert [t for t, _, _ in rx._pending] == ["ring"]   # still parked
+        # the later AG-round claim drains it, meta + payload intact
+        _, meta, arrays = rx.recv_match(
+            "ring", {"phase": ag, "step": 0, "round": 1, "gstep": 3},
+            timeout=5.0)
+        assert meta == {"phase": ag, "step": 0, "round": 1, "gstep": 3,
+                        "src": 1}
+        np.testing.assert_array_equal(arrays["p"], np.ones(5, np.float32))
+        assert rx._pending == []
+        assert rx.array_bytes_dropped == {}
     finally:
         tx.close()
         rx.close()

@@ -1,0 +1,248 @@
+"""Static comm-protocol verifier: grid acceptance, geometry, seeded
+bugs, determinism lint.
+
+The two acceptance gates of the verifier (ISSUE 8) run in the fast
+tier — the whole 132-cell grid simulates in well under a second:
+
+* every non-rejected {hub, ring} x {schedule} x {sync, overlap} x
+  n in {1, 2, 3, 5} x {uniform, ragged, idle-rank} cell verifies clean
+  on BOTH data planes (rendezvous pipe, buffered shm);
+* every seeded protocol mutant is caught with the expected violation
+  class.
+
+The rest pins the model's geometry (rounds, overlap plan, exchange
+event sequences) and the determinism lint to the engine's behaviour.
+"""
+
+import pytest
+
+from repro.core.engine import ring
+from repro.core.engine.verify import (BASELINE, Cell, RankShape, Variant,
+                                      default_layouts, exchange_steps,
+                                      grid_cells, lint_determinism,
+                                      rounds_for, run_mutation_harness,
+                                      verify_cell, verify_grid)
+from repro.core.engine.verify.model import (ROLES_EVEN, ROLES_ODD,
+                                            overlap_plan_depth)
+from repro.core.engine.verify.mutations import STATIC_MUTANTS
+
+
+def _uniform(n, ell=2, m=1, chunk=4):
+    return tuple(RankShape(ell=ell, m=m, chunk=chunk) for _ in range(n))
+
+
+# ---------------------------------------------------------------------------
+# acceptance gates
+# ---------------------------------------------------------------------------
+
+
+def test_full_grid_verifies_on_both_planes():
+    report = verify_grid()
+    assert report.ok, report.summary()
+    # the grid's composition is itself part of the acceptance surface:
+    # hub x overlap cells must be rejected-by-construction (the engine
+    # refuses to build them), everything else actually simulated.
+    cells = grid_cells()
+    expect_rejected = sum(1 for c in cells if c.rejected_reason)
+    assert report.rejected == expect_rejected > 0
+    assert report.checked == len(cells) - expect_rejected
+    assert report.checked >= 99
+    for r in report.reports:
+        if r.rejected is None:
+            assert [p.plane for p in r.planes] == ["pipe", "shm"]
+            assert all(p.events_run > 0 for p in r.planes)
+
+
+def test_mutation_harness_catches_every_seeded_bug():
+    report = run_mutation_harness()
+    assert report.ok, report.summary()
+    names = {r.name for r in report.results}
+    assert names == set(STATIC_MUTANTS) | {"ring_order_accumulation"}
+
+
+# ---------------------------------------------------------------------------
+# targeted per-check tests: each mutant class on a minimal cell
+# ---------------------------------------------------------------------------
+
+
+def _classes(cell, variant):
+    return {v.check for v in verify_cell(cell, variant).violations()}
+
+
+def test_send_first_order_deadlocks_on_pipe_plane():
+    cell = Cell("ring", "layered", False, _uniform(2), "uniform")
+    variant = Variant(name="x", send_order="send_first")
+    report = verify_cell(cell, variant)
+    by_plane = {p.plane: p for p in report.planes}
+    # every rank sending first wedges the rendezvous plane; the shm
+    # plane buffers bulk sends, so the same bug slips through there —
+    # exactly why both planes are simulated.
+    assert any(v.check == "deadlock" for v in by_plane["pipe"].violations)
+    assert not any(v.check == "deadlock"
+                   for v in by_plane["shm"].violations)
+
+
+def test_collapsed_round_tags_collide():
+    cell = Cell("ring", "per_microbatch", True, _uniform(3), "uniform")
+    assert "collision" in _classes(cell, Variant(name="x",
+                                                 tag_rounds=False))
+
+
+def test_unacked_arena_reuse_detected():
+    cell = Cell("ring", "layered", False, _uniform(3), "uniform")
+    assert "arena" in _classes(cell, Variant(name="x", ack_gated=False))
+
+
+def test_deep_prefetch_overflows_handoff_queue():
+    cell = Cell("ring", "per_microbatch", True, _uniform(2, ell=3),
+                "uniform")
+    assert "queue_cap" in _classes(cell, Variant(name="x",
+                                                 prefetch_depth=2))
+
+
+def test_baseline_passes_every_mutant_cell():
+    for name, (_, cell, _) in STATIC_MUTANTS.items():
+        report = verify_cell(cell)
+        assert report.ok, f"{name}: baseline fails: {report.summary()}"
+
+
+# ---------------------------------------------------------------------------
+# model geometry: rounds, overlap plan, grid composition
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_plan_depth_one_is_the_shipped_plan():
+    for n in range(1, 7):
+        assert overlap_plan_depth(n, 1) == ring.overlap_plan(n)
+    with pytest.raises(ValueError):
+        overlap_plan_depth(3, 0)
+
+
+def test_overlap_plan_depth_two_prefetches_two_ahead():
+    ops = overlap_plan_depth(4, 2)
+    assert ops.count(("reduce_scatter", 0)) == 1
+    # before round 0's reduce_scatter, rounds 0..2 are already gathered
+    idx = ops.index(("reduce_scatter", 0))
+    gathered = {k for op, k in ops[:idx] if op == "allgather"}
+    assert gathered == {0, 1, 2}
+
+
+def test_rounds_for_per_microbatch_geometry():
+    cell = Cell("ring", "per_microbatch", False, _uniform(3, ell=2),
+                "uniform")
+    rounds = rounds_for(cell)
+    assert [(r.lo, r.hi) for r in rounds] == [(0, 1), (1, 2)]
+    assert all(r.active == (0, 1, 2) for r in rounds)
+
+
+def test_rounds_for_sheds_short_and_idle_ranks():
+    # ragged ell: rank 1 has only one microbatch slot -> inactive in
+    # the second per_microbatch round; rank 2 never computes (b == 0)
+    layout = (RankShape(ell=2, m=1, chunk=4),
+              RankShape(ell=1, m=1, chunk=4),
+              RankShape(ell=2, m=0, chunk=4))
+    cell = Cell("ring", "per_microbatch", False, layout, "ragged")
+    rounds = rounds_for(cell)
+    assert [r.active for r in rounds] == [(0, 1), (0,)]
+    assert verify_cell(cell).ok
+
+
+def test_hub_overlap_rejected_by_construction():
+    cell = Cell("hub", "layered", True, _uniform(2), "uniform")
+    assert cell.rejected_reason
+    report = verify_cell(cell)
+    assert report.ok and report.rejected and report.planes == []
+
+
+def test_default_layouts_cover_zero_shard_and_idle_rank():
+    layouts = default_layouts(5)
+    assert set(layouts) == {"uniform", "ragged", "idle-rank"}
+    assert any(rs.chunk == 0 for rs in layouts["ragged"])
+    idle = layouts["idle-rank"]
+    assert idle[-1].b == 0 and all(rs.b > 0 for rs in idle[:-1])
+
+
+# ---------------------------------------------------------------------------
+# exchange_steps: the shared oracle of checker and sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_exchange_steps_parity_roles_and_metas():
+    tags = {"round": 2, "gstep": 7}
+    for rank, roles in ((0, ROLES_EVEN), (1, ROLES_ODD)):
+        steps = exchange_steps(rank, 3, "allgather(p)[0,1)", tags)
+        assert len(steps) == 2 * len(roles)      # n-1 ring steps
+        assert [role for role, _, _ in steps[:4]] == list(roles)
+        prev_rank, next_rank = ring.ring_neighbors(3, rank)
+        for role, s, meta in steps:
+            assert meta["phase"] == "allgather(p)[0,1)"
+            assert meta["round"] == 2 and meta["gstep"] == 7
+            expect_src = {"send_payload": rank, "send_ack": rank,
+                          "recv_payload": prev_rank,
+                          "recv_ack": next_rank}[role]
+            assert meta["src"] == expect_src, (role, s, meta)
+
+
+def test_exchange_steps_single_rank_is_empty():
+    assert exchange_steps(0, 1, "allgather(p)[0,1)",
+                          {"round": 0, "gstep": 0}) == []
+    with pytest.raises(ValueError):
+        exchange_steps(0, 0, "p", {})
+
+
+def test_exchange_steps_variant_knobs():
+    tags = {"round": 0, "gstep": 0}
+    sf = exchange_steps(1, 2, "p", tags,
+                        Variant(name="x", send_order="send_first"))
+    assert sf[0][0] == "send_payload"            # odd rank sends first
+    na = exchange_steps(0, 2, "p", tags, Variant(name="x",
+                                                 ack_gated=False))
+    assert all(not role.endswith("_ack") for role, _, _ in na)
+
+
+# ---------------------------------------------------------------------------
+# determinism lint
+# ---------------------------------------------------------------------------
+
+ORDER_DEP_SNIPPET = '''\
+def bad(self, arrival):
+    acc = None
+    for origin, chunks in arrival.items():
+        acc = chunks if acc is None else merge(acc, chunks)
+    self.accum_grads(acc)
+'''
+
+PER_KEY_SNIPPET = '''\
+def fine(self, shards):
+    out = {}
+    for k, v in shards.items():
+        out[k] = v * 2
+    return out
+'''
+
+UNBOUND_ACCUM_SNIPPET = '''\
+def bad2(self, grads):
+    total = grads
+    self.accum_grads(total)
+'''
+
+
+def test_lint_clean_on_the_real_data_plane():
+    assert lint_determinism() == []
+
+
+def test_lint_flags_order_dependent_reduction():
+    findings = lint_determinism(paths=[],
+                                extra_sources=[("<m>", ORDER_DEP_SNIPPET)])
+    assert findings and all(f.rule.startswith("DET") for f in findings)
+
+
+def test_lint_exempts_per_key_independent_dict_loops():
+    assert lint_determinism(paths=[],
+                            extra_sources=[("<m>", PER_KEY_SNIPPET)]) == []
+
+
+def test_lint_flags_accum_not_through_combine_fixed_order():
+    findings = lint_determinism(
+        paths=[], extra_sources=[("<m>", UNBOUND_ACCUM_SNIPPET)])
+    assert any(f.rule == "DET-2" for f in findings)

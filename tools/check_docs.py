@@ -29,6 +29,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCSTRING_DIRS = [
     os.path.join("src", "repro", "core"),
     os.path.join("src", "repro", "core", "engine"),
+    os.path.join("src", "repro", "core", "engine", "verify"),
 ]
 
 #: markdown files whose relative links must resolve

@@ -1,0 +1,135 @@
+"""Repo-invariant linter (CI gate): exception discipline, timing
+clocks, reduction determinism.
+
+Three AST checks, zero dependencies beyond the repo itself:
+
+1. **L1 — broad exception handlers.**  ``except Exception`` /
+   ``except BaseException`` swallows protocol errors the data plane is
+   designed to surface loudly (a wedged ring peer, a dead worker, a
+   sanitizer violation).  A broad handler is allowed only when it
+   (a) re-raises (a bare ``raise`` anywhere in the handler), or
+   (b) carries a justified marker on the ``except`` line:
+   ``# noqa: BLE001 - <why this swallow is safe>`` — the reason is
+   mandatory, a bare ``noqa: BLE001`` does not pass.
+2. **L2 — wall clocks in timing paths.**  ``time.time()`` is not
+   monotonic (NTP slew moves it); every duration measurement must use
+   ``time.perf_counter()``.  ``time.time()`` is allowed only for
+   *timestamps* marked ``# noqa: WALLCLOCK - <why>``.
+3. **L3 — reduction determinism** (delegates to
+   :mod:`repro.core.engine.verify.lint`): every gradient reduction in
+   the data-plane modules must flow through ``combine_fixed_order`` —
+   the bitwise cross-substrate parity contract of the paper
+   (Sec. 2 / App. C).
+
+Scope: ``src/repro``, ``tools``, ``benchmarks``, ``examples`` for
+L1/L2; the engine data-plane modules for L3.  Exit status is nonzero
+on any finding; run as
+
+    PYTHONPATH=src python tools/lint_invariants.py
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+from typing import List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: directories scanned by L1/L2 (every .py file under them)
+SCAN_DIRS = [
+    os.path.join("src", "repro"),
+    "tools",
+    "benchmarks",
+    "examples",
+]
+
+#: a justified broad-except marker: noqa: BLE001 plus a dash'd reason
+BLE_JUSTIFIED = re.compile(r"noqa:\s*BLE001\s*[-—–]\s*\S")
+#: a justified wall-clock timestamp marker
+WALLCLOCK_JUSTIFIED = re.compile(r"noqa:\s*WALLCLOCK\s*[-—–]\s*\S")
+
+
+def _py_files() -> List[str]:
+    out = []
+    for d in SCAN_DIRS:
+        root = os.path.join(REPO, d)
+        for dirpath, _, names in os.walk(root):
+            out.extend(os.path.join(dirpath, n) for n in sorted(names)
+                       if n.endswith(".py"))
+    return sorted(out)
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) and n.exc is None
+               for n in ast.walk(handler))
+
+
+def _handler_is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:                       # bare except:
+        return True
+    names = [t] if not isinstance(t, ast.Tuple) else list(t.elts)
+    return any(isinstance(n, ast.Name)
+               and n.id in ("Exception", "BaseException") for n in names)
+
+
+def lint_file(path: str) -> List[Tuple[int, str, str]]:
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [(e.lineno or 0, "L0", f"syntax error: {e.msg}")]
+    findings: List[Tuple[int, str, str]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler) and _handler_is_broad(node):
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) \
+                else ""
+            if _reraises(node) or BLE_JUSTIFIED.search(line):
+                continue
+            findings.append((
+                node.lineno, "L1",
+                "broad exception handler neither re-raises nor carries "
+                "a justified '# noqa: BLE001 - <reason>' marker"))
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Attribute) and fn.attr == "time" and \
+                    isinstance(fn.value, ast.Name) and \
+                    fn.value.id == "time":
+                line = lines[node.lineno - 1] if node.lineno <= len(lines) \
+                    else ""
+                if WALLCLOCK_JUSTIFIED.search(line):
+                    continue
+                findings.append((
+                    node.lineno, "L2",
+                    "time.time() in a timing path — use "
+                    "time.perf_counter() (monotonic), or mark a real "
+                    "timestamp with '# noqa: WALLCLOCK - <reason>'"))
+    return findings
+
+
+def main() -> int:
+    failed = 0
+    for path in _py_files():
+        rel = os.path.relpath(path, REPO)
+        for lineno, rule, msg in lint_file(path):
+            print(f"{rel}:{lineno}: [{rule}] {msg}")
+            failed += 1
+    # L3: determinism lint over the engine data plane
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.engine.verify.lint import lint_determinism
+    for f in lint_determinism():
+        print(f"{os.path.relpath(f.path, REPO)}:{f.lineno}: "
+              f"[{f.rule}] {f.qualname}: {f.detail}")
+        failed += 1
+    status = "FAIL" if failed else "ok"
+    print(f"invariant lint: {failed} finding(s) [{status}]")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
